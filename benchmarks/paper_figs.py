@@ -1,0 +1,161 @@
+"""Paper-figure reproductions (Figs. 3, 9, 10, 11, 12, 13, 14) — each
+function returns CSV-ish rows and a headline dict used by run.py and the
+EXPERIMENTS.md table generator."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.osmosis_pspin import PSPIN
+from repro.core import FragmentationPolicy
+from repro.sim.scenarios import (run_compute_mixture,
+                                 run_congestor_victim_compute,
+                                 run_hol_blocking, run_io_mixture,
+                                 run_standalone, service_time_vs_ppb)
+from repro.sim.workloads import WORKLOADS, ppb
+
+
+def fig3_ppb():
+    """Service time vs per-packet budget."""
+    sizes = [64, 128, 256, 512, 1024, 2048, 4096]
+    table = service_time_vs_ppb(sizes)
+    rows = [("workload", "pkt_bytes", "service_ns", "ppb_ns", "fits")]
+    congested_64 = 0
+    for name, lst in table.items():
+        for p, svc, budget in lst:
+            rows.append((name, p, round(svc, 1), round(budget, 1),
+                         int(svc <= budget)))
+            if p == 64 and svc > budget:
+                congested_64 += 1
+    return rows, {"workloads_congested_at_64B": congested_64,
+                  "total_workloads": len(table)}
+
+
+def fig9_fairness(duration_us=150.0):
+    rows = [("scheduler", "jain_pu_timeavg", "congestor_pkts",
+             "victim_pkts")]
+    head = {}
+    for sched in ("rr", "wlbvt"):
+        r = run_congestor_victim_compute(sched, duration_us=duration_us)
+        rows.append((sched, round(r.jain_pu_timeavg, 4),
+                     r.stats[0].completed, r.stats[1].completed))
+        head[f"jain_{sched}"] = round(r.jain_pu_timeavg, 4)
+    head["fairness_gain_pct"] = round(
+        100 * (head["jain_wlbvt"] - head["jain_rr"]) / head["jain_rr"], 1)
+    return rows, head
+
+
+def fig10_hol(duration_us=100.0):
+    rows = [("mode", "frag_bytes", "victim_p50_ns", "victim_p99_ns",
+             "congestor_gbps")]
+    base = run_hol_blocking(FragmentationPolicy(mode="off"), arb="fifo",
+                            duration_us=duration_us)
+    rows.append(("off", 0, round(base.p50(1)), round(base.p99(1)),
+                 round(base.throughput_gbps(0), 2)))
+    head = {"victim_p99_off": round(base.p99(1))}
+    for mode in ("software", "hardware"):
+        for fb in (512, 1024, 2048):
+            r = run_hol_blocking(
+                FragmentationPolicy(mode=mode, fragment_bytes=fb),
+                duration_us=duration_us)
+            rows.append((mode, fb, round(r.p50(1)), round(r.p99(1)),
+                         round(r.throughput_gbps(0), 2)))
+            if mode == "hardware" and fb == 512:
+                head["victim_p99_hw512"] = round(r.p99(1))
+    head["victim_p99_improvement_x"] = round(
+        head["victim_p99_off"] / max(head["victim_p99_hw512"], 1e-9), 1)
+    return rows, head
+
+
+def fig11_overheads(duration_us=60.0):
+    rows = [("workload", "pkt", "baseline_mpps", "osmosis_mpps",
+             "overhead_pct")]
+    worst = 0.0
+    for name in ("aggregate", "reduce", "histogram", "io_read", "io_write",
+                 "filtering"):
+        for pkt in (256, 1024, 4096):
+            b = run_standalone(name, pkt_size=pkt, osmosis=False,
+                               duration_us=duration_us)
+            o = run_standalone(name, pkt_size=pkt, osmosis=True,
+                               duration_us=duration_us)
+            mb = b.stats[0].completed / max(b.time, 1e-9) * 1e3   # Mpps
+            mo = o.stats[0].completed / max(o.time, 1e-9) * 1e3
+            ov = 100 * (mb - mo) / max(mb, 1e-9)
+            worst = max(worst, ov)
+            rows.append((name, pkt, round(mb, 1), round(mo, 1),
+                         round(ov, 1)))
+    return rows, {"worst_overhead_pct": round(worst, 1)}
+
+
+def fig12_compute_mix(duration_us=150.0):
+    rows = [("scheduler", "jain_timeavg", "fct_reduce_victim",
+             "fct_reduce_congestor", "fct_hist_victim",
+             "fct_hist_congestor")]
+    head = {}
+    for sched in ("rr", "wlbvt"):
+        r = run_compute_mixture(sched, duration_us=duration_us)
+        fcts = [round(r.stats[i].fct) for i in range(4)]
+        rows.append((sched, round(r.jain_pu_timeavg, 4), *fcts))
+        head[f"jain_{sched}"] = round(r.jain_pu_timeavg, 4)
+        head[f"fcts_{sched}"] = fcts
+    head["fairer_pct"] = round(100 * (head["jain_wlbvt"] - head["jain_rr"])
+                               / head["jain_rr"], 1)
+    head["fct_gain_pct"] = [
+        round(100 * (a - b) / max(a, 1e-9), 1)
+        for a, b in zip(head["fcts_rr"], head["fcts_wlbvt"])]
+    return rows, head
+
+
+def fig13_io_mix(duration_us=150.0):
+    rows = [("scheduler", "jain_io_timeavg", "fct_rv", "fct_rc",
+             "fct_wv", "fct_wc")]
+    head = {}
+    for sched in ("rr", "wlbvt"):
+        r = run_io_mixture(sched, duration_us=duration_us)
+        fcts = [round(r.stats[i].fct) for i in range(4)]
+        rows.append((sched, round(r.jain_io_timeavg, 4), *fcts))
+        head[f"jain_{sched}"] = round(r.jain_io_timeavg, 4)
+        head[f"fcts_{sched}"] = fcts
+    head["fairer_pct"] = round(100 * (head["jain_wlbvt"] - head["jain_rr"])
+                               / max(head["jain_rr"], 1e-9), 1)
+    head["victim_fct_gain_pct"] = [
+        round(100 * (head["fcts_rr"][i] - head["fcts_wlbvt"][i])
+              / max(head["fcts_rr"][i], 1e-9), 1) for i in (0, 2)]
+    return rows, head
+
+
+def fig14_latency_dist(duration_us=150.0):
+    rows = [("config", "tenant", "p50_ns", "p99_ns")]
+    head = {}
+    ref = run_io_mixture("rr", duration_us=duration_us)
+    for fb in (1024, 2048):
+        r = run_io_mixture("wlbvt",
+                           frag=FragmentationPolicy(mode="hardware",
+                                                    fragment_bytes=fb),
+                           duration_us=duration_us)
+        for i, nm in enumerate(("read_victim", "read_congestor",
+                                "write_victim", "write_congestor")):
+            rows.append((f"osmosis_f{fb}", nm, round(r.p50(i)),
+                         round(r.p99(i))))
+    for i, nm in enumerate(("read_victim", "read_congestor",
+                            "write_victim", "write_congestor")):
+        rows.append(("reference", nm, round(ref.p50(i)), round(ref.p99(i))))
+    r = run_io_mixture("wlbvt",
+                       frag=FragmentationPolicy(mode="hardware",
+                                                fragment_bytes=1024),
+                       duration_us=duration_us)
+    head["victim_kernel_p50_reduction_x"] = round(
+        ref.p50(0) / max(r.p50(0), 1e-9), 1)
+    head["congestor_kernel_p50_increase_x"] = round(
+        r.p50(1) / max(ref.p50(1), 1e-9), 1)
+    return rows, head
+
+
+ALL = {
+    "fig3_ppb": fig3_ppb,
+    "fig9_fairness": fig9_fairness,
+    "fig10_hol": fig10_hol,
+    "fig11_overheads": fig11_overheads,
+    "fig12_compute_mix": fig12_compute_mix,
+    "fig13_io_mix": fig13_io_mix,
+    "fig14_latency_dist": fig14_latency_dist,
+}

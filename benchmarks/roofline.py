@@ -1,0 +1,179 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun)
+and derives, per (arch x shape x mesh):
+
+  compute_s    = HLO flops/device   / 197 TFLOP/s      (v5e bf16 peak)
+  memory_s     = HLO bytes/device   / 819 GB/s         (HBM bw)
+  collective_s = collective bytes/device / 50 GB/s     (per-link ICI)
+
+plus the dominant term, MODEL_FLOPS (analytic 6·N·D / 6·N_active·D for
+train, 2·N_active·D + attention for inference), the useful-compute ratio
+MODEL_FLOPS / (HLO flops x devices), and the headline score
+
+  useful_roofline = (MODEL_FLOPS / devices / peak) / max(terms)
+
+i.e. the fraction of the chip's compute roofline at which *useful* model
+flops would execute if the step ran exactly at its binding resource limit.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step (global, forward[+backward])."""
+    from repro.configs.base import (GLOBAL_ATTN, LOCAL_ATTN,
+                                    active_param_count)
+    n_act = active_param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        matmul = 6.0 * n_act * tokens
+        attn = 0.0
+        pattern = cfg.pattern_for_layers()
+        for kind in pattern:
+            if kind == GLOBAL_ATTN:
+                ctx = S / 2                       # causal average
+            elif kind == LOCAL_ATTN:
+                ctx = min(cfg.window_size or S, S) / 2
+            else:
+                continue
+            # qk + pv, fwd+bwd (x3), 2 flops/MAC
+            attn += 3 * 2 * 2 * B * S * ctx * cfg.num_heads * cfg.head_dim
+        return matmul + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        matmul = 2.0 * n_act * tokens
+        attn = 0.0
+        for kind in cfg.pattern_for_layers():
+            if kind == GLOBAL_ATTN:
+                ctx = S / 2
+            elif kind == LOCAL_ATTN:
+                ctx = min(cfg.window_size or S, S) / 2
+            else:
+                continue
+            attn += 2 * 2 * B * S * ctx * cfg.num_heads * cfg.head_dim
+        return matmul + attn
+    # decode: one token against a cache of length S
+    tokens = B * 1
+    matmul = 2.0 * n_act * tokens
+    attn = 0.0
+    for kind in cfg.pattern_for_layers():
+        if kind == GLOBAL_ATTN:
+            ctx = S
+        elif kind == LOCAL_ATTN:
+            ctx = min(cfg.window_size or S, S)
+        else:
+            continue
+        attn += 2 * 2 * B * ctx * cfg.num_heads * cfg.head_dim
+    return matmul + attn
+
+
+def analyse(rec: dict) -> dict:
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    dev = rec["devices"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    compute_s = flops_dev / PEAK
+    memory_s = bytes_dev / HBM
+    coll_s = coll_dev / ICI
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful_ratio = mf / max(flops_dev * dev, 1.0)
+    bound = max(terms.values())
+    useful_roofline = (mf / dev / PEAK) / bound if bound > 0 else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh")},
+        "tag": rec.get("tag", ""),
+        "devices": dev,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": mf, "useful_ratio": useful_ratio,
+        "useful_roofline": useful_roofline,
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30,
+        "fits_16g": rec["memory"]["peak_bytes_est"] < 16 * 2**30,
+    }
+
+
+def load_records(tag: str = "", mesh: str = ""):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag:
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default="")
+    ap.add_argument("--tag", default="", help="perf-iteration tag filter")
+    ap.add_argument("--mesh", default="singlepod",
+                    help="singlepod | multipod | '' for both")
+    args = ap.parse_args(argv)
+
+    recs = load_records(args.tag, args.mesh)
+    if not recs:
+        print("no dry-run records found — run repro.launch.dryrun first",
+              file=sys.stderr)
+        return 1
+    rows = []
+    for rec in recs:
+        if "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "skipped": rec["skipped"]})
+            continue
+        rows.append(analyse(rec))
+
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':9s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'useful%':>8s} {'roofl%':>7s} "
+           f"{'GiB/dev':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:9s} "
+                  f"   [skipped: {r['skipped'][:60]}]")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:9s} "
+              f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+              f"{r['collective_s']:10.3e} {r['dominant']:>10s} "
+              f"{100*r['useful_ratio']:7.1f}% {100*r['useful_roofline']:6.1f}% "
+              f"{r['peak_gib']:8.2f}")
+    if args.csv:
+        import csv as _csv
+        keys = [k for k in rows[0] if k != "skipped"]
+        with open(args.csv, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=sorted(
+                {k for r in rows for k in r}))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {args.csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Benchmark harness: one entry per paper table/figure + adapted serving
+experiment + scheduler-cost scaling.  Prints CSV blocks and a headline
+summary per benchmark.  Roofline (benchmarks.roofline) runs separately
+after repro.launch.dryrun has produced artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9_fairness]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter sim durations")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_figs, sched_cost, serving_fairness
+    suite = dict(paper_figs.ALL)
+    suite["sched_cost"] = sched_cost.run
+    suite["serving_fairness"] = serving_fairness.run
+
+    names = [args.only] if args.only else list(suite)
+    headlines = {}
+    for name in names:
+        fn = suite[name]
+        t0 = time.time()
+        kw = {}
+        if args.fast and name.startswith("fig") and name != "fig3_ppb":
+            kw = {"duration_us": 60.0}
+        try:
+            rows, head = fn(**kw)
+        except TypeError:
+            rows, head = fn()
+        dt = time.time() - t0
+        print(f"\n=== {name} ({dt:.1f}s) ===")
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print(f"--- headline: {json.dumps(head)}")
+        headlines[name] = head
+
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "headlines.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(headlines, f, indent=1)
+    print(f"\nwrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Scheduler decision cost vs tenant count (paper Figs. 7-8 analogue).
+
+The ASIC numbers (area, 5-cycle decision) don't transfer to a software
+runtime; the algorithmic analogue is decision latency scaling with the
+number of FMQs.  We time the numpy control-plane path and the jitted jnp
+data-plane path; both are O(T) vectorized, matching the paper's linear
+area scaling, and the serving engine amortizes one decision per slot-fill
+over a multi-ms XLA step (the paper hides its 5 cycles under packet DMA).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_numpy(T: int, iters: int = 2000) -> float:
+    from repro.core import wlbvt as W
+    st = W.WLBVTState.create(np.ones(T))
+    st.queue_len[:] = np.random.randint(0, 3, T)
+    st.total_occup[:] = np.random.rand(T) * 100
+    st.bvt[:] = np.random.rand(T) * 100 + 1
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        W.select(st, 32)
+    return (time.perf_counter() - t0) / iters * 1e9
+
+
+def time_jnp(T: int, iters: int = 200) -> float:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import wlbvt as W
+    st = W.init_state_jnp(np.ones(T))
+    st["queue_len"] = jnp.asarray(np.random.randint(0, 3, T), jnp.int32)
+    st["total_occup"] = jnp.asarray(np.random.rand(T) * 100, jnp.float32)
+    st["bvt"] = jnp.asarray(np.random.rand(T) * 100 + 1, jnp.float32)
+    fn = jax.jit(lambda s: W.select_jnp(s, 32))
+    fn(st).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(st).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e9
+
+
+def run():
+    rows = [("num_fmqs", "numpy_ns", "jnp_jit_ns")]
+    for T in (8, 32, 128, 512, 2048):
+        rows.append((T, round(time_numpy(T)), round(time_jnp(T))))
+    head = {"decision_ns_at_128_fmqs": rows[3][1]}
+    return rows, head
+
+
+if __name__ == "__main__":
+    rows, head = run()
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(head)

@@ -1,0 +1,74 @@
+"""Paper-figure playground: run the cycle-accurate PsPIN simulator and
+print the OSMOSIS-vs-reference comparison for any of the paper's
+experiments (Figs. 9, 10, 12, 13) from the command line.
+
+    PYTHONPATH=src python examples/fairness_demo.py --exp fig9
+    PYTHONPATH=src python examples/fairness_demo.py --exp fig10
+    PYTHONPATH=src python examples/fairness_demo.py --exp fig13
+"""
+import argparse
+
+from repro.core import FragmentationPolicy
+from repro.sim.scenarios import (run_compute_mixture,
+                                 run_congestor_victim_compute,
+                                 run_hol_blocking, run_io_mixture)
+
+
+def fig9():
+    print("Fig 9 — PU fairness, 2x-costlier congestor vs victim")
+    for sched in ("rr", "wlbvt"):
+        r = run_congestor_victim_compute(sched, duration_us=120)
+        print(f"  {sched:6s} Jain={r.jain_pu_timeavg:.3f}  "
+              f"congestor={r.stats[0].completed}pkts  "
+              f"victim={r.stats[1].completed}pkts")
+
+
+def fig10():
+    print("Fig 10 — HoL-blocking vs fragment size (victim=64B, "
+          "congestor=4KiB egress)")
+    base = run_hol_blocking(FragmentationPolicy(mode="off"), arb="fifo",
+                            duration_us=80)
+    print(f"  {'off(fifo)':14s} victim p99={base.p99(1):7.0f}ns  "
+          f"congestor={base.throughput_gbps(0):5.1f}Gbit/s")
+    for mode in ("software", "hardware"):
+        for fb in (512, 2048):
+            r = run_hol_blocking(
+                FragmentationPolicy(mode=mode, fragment_bytes=fb),
+                duration_us=80)
+            print(f"  {mode+f'({fb}B)':14s} victim p99={r.p99(1):7.0f}ns  "
+                  f"congestor={r.throughput_gbps(0):5.1f}Gbit/s")
+
+
+def fig12():
+    print("Fig 12 — compute-bound mixture (Reduce+Histogram x "
+          "victim/congestor)")
+    for sched in ("rr", "wlbvt"):
+        r = run_compute_mixture(sched, duration_us=120)
+        fct = [round(r.stats[i].fct) for i in range(4)]
+        print(f"  {sched:6s} Jain={r.jain_pu_timeavg:.3f}  FCTs={fct}")
+
+
+def fig13():
+    print("Fig 13 — IO-bound mixture (DMA read/write x victim/congestor)")
+    for sched in ("rr", "wlbvt"):
+        r = run_io_mixture(sched, duration_us=120)
+        fct = [round(r.stats[i].fct) for i in range(4)]
+        print(f"  {sched:6s} Jain_io={r.jain_io_timeavg:.3f}  FCTs={fct}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="fig9",
+                    choices=["fig9", "fig10", "fig12", "fig13", "all"])
+    args = ap.parse_args()
+    exps = {"fig9": fig9, "fig10": fig10, "fig12": fig12, "fig13": fig13}
+    if args.exp == "all":
+        for fn in exps.values():
+            fn()
+            print()
+    else:
+        exps[args.exp]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""PsPIN / OSMOSIS hardware model constants (paper §6-§7 setup) and the
+TPU v5e target constants used for roofline analysis."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PsPINConfig:
+    """Cycle-level simulator hardware model (paper experimental setup)."""
+    num_clusters: int = 4
+    pus_per_cluster: int = 8
+    clock_ghz: float = 1.0                  # 1 cycle == 1 ns
+    ingress_gbps: float = 400.0             # full-duplex link
+    egress_gbps: float = 400.0
+    axi_gbps: float = 512.0                 # shared L2/host interconnect
+    l2_packet_buf_bytes: int = 4 << 20
+    l2_kernel_buf_bytes: int = 4 << 20
+    l1_bytes: int = 1 << 20
+    max_fmqs: int = 128
+    sched_decision_cycles: int = 5          # WLBVT pipeline depth (paper §6.2)
+    dma_setup_cycles: int = 13              # 64B packet L2->L1 DMA (paper §6.2)
+    header_bytes: int = 28                  # IPv4/UDP header
+
+    @property
+    def num_pus(self) -> int:
+        return self.num_clusters * self.pus_per_cluster
+
+    def wire_ns_per_byte(self, gbps: float) -> float:
+        return 8.0 / gbps                   # ns per byte at `gbps`
+
+
+PSPIN = PsPINConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUTarget:
+    """Roofline constants for the production target (TPU v5e)."""
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12         # per chip
+    hbm_bytes_per_s: float = 819e9          # per chip
+    ici_bytes_per_s_per_link: float = 50e9  # per link/direction
+    hbm_bytes: float = 16e9                 # capacity per chip
+    vmem_bytes: float = 128 * 2**20         # ~128 MiB VMEM
+
+
+V5E = TPUTarget()

@@ -1,0 +1,19 @@
+"""OSMOSIS core: schedulers, FMQs, SLO, fragmentation, accounting."""
+from repro.core.accounting import (FCTTracker, TimeAveragedJain,
+                                   jain_fairness, weighted_jain)
+from repro.core.admission import AdmissionError, SegmentAllocator
+from repro.core.events import Event, EventKind, EventQueue
+from repro.core.fmq import FMQ, PacketDescriptor
+from repro.core.fragmentation import (Fragment, FragmentationPolicy,
+                                      fragment_tokens, fragment_transfer)
+from repro.core.matching import MatchingEngine, MatchRule
+from repro.core.slo import ECTX, SLOPolicy
+from repro.core import wlbvt
+
+__all__ = [
+    "FCTTracker", "TimeAveragedJain", "jain_fairness", "weighted_jain",
+    "AdmissionError", "SegmentAllocator", "Event", "EventKind", "EventQueue",
+    "FMQ", "PacketDescriptor", "Fragment", "FragmentationPolicy",
+    "fragment_tokens", "fragment_transfer", "MatchingEngine", "MatchRule",
+    "ECTX", "SLOPolicy", "wlbvt",
+]

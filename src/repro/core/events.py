@@ -1,0 +1,52 @@
+"""Event queues (EQ) — paper §5.2: per-ECTX host notification channel.
+
+EQ traffic shares the DMA path but at the *highest* IO priority (R5);
+in the serving engine, control events are drained before data-path
+scheduling each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Deque, List, Optional
+
+
+class EventKind(enum.Enum):
+    KERNEL_ERROR = "kernel_error"
+    CYCLE_BUDGET_EXCEEDED = "cycle_budget_exceeded"
+    MEMORY_FAULT = "memory_fault"
+    QUEUE_OVERFLOW = "queue_overflow"
+    REQUEST_KILLED = "request_killed"
+    ADMITTED = "admitted"
+    EVICTED = "evicted"
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    tenant: int
+    kind: EventKind
+    time: float
+    detail: str = ""
+
+
+class EventQueue:
+    def __init__(self, capacity: int = 4096) -> None:
+        self._q: Deque[Event] = deque(maxlen=capacity)
+        self.dropped = 0
+
+    def push(self, ev: Event) -> None:
+        if len(self._q) == self._q.maxlen:
+            self.dropped += 1
+        self._q.append(ev)
+
+    def poll(self) -> Optional[Event]:
+        return self._q.popleft() if self._q else None
+
+    def drain(self) -> List[Event]:
+        out = list(self._q)
+        self._q.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._q)

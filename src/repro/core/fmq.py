@@ -1,0 +1,49 @@
+"""Flow Management Queues — paper §5.3 hardware flow abstraction.
+
+An FMQ is a FIFO of packet descriptors plus scheduling state (the BVT
+counters live in the shared WLBVT arrays, indexed by ``index``) plus the
+pointers into the ECTX.  The 64-bit BVT counter / 16-bit priority register
+widths from §6.2 are modeled by the array dtypes in wlbvt.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Optional
+
+from repro.core.slo import ECTX
+
+
+@dataclasses.dataclass
+class PacketDescriptor:
+    tenant: int
+    size_bytes: int           # payload + header
+    arrival: float            # cycles
+    transfer_id: int = -1
+    meta: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class FMQ:
+    index: int
+    ectx: ECTX
+    capacity: int = 1024      # descriptor FIFO depth
+    fifo: Deque[PacketDescriptor] = dataclasses.field(default_factory=deque)
+    drops: int = 0
+    enqueued: int = 0
+    completed: int = 0
+
+    def push(self, pkt: PacketDescriptor) -> bool:
+        """False => FIFO overflow (paper: ECN-mark / drop)."""
+        if len(self.fifo) >= self.capacity:
+            self.drops += 1
+            return False
+        self.fifo.append(pkt)
+        self.enqueued += 1
+        return True
+
+    def pop(self) -> Optional[PacketDescriptor]:
+        return self.fifo.popleft() if self.fifo else None
+
+    def __len__(self) -> int:
+        return len(self.fifo)

@@ -1,0 +1,198 @@
+"""WLBVT / RR / WRR schedulers — paper Listing 1 and §5.3.
+
+Two numerically identical implementations of the Weight-Limited Borrowed
+Virtual Time policy:
+
+  * ``WLBVTState`` + ``select``/``advance`` on numpy arrays — used by the
+    cycle-accurate PsPIN simulator (event-driven, so per-cycle
+    ``update_tput`` is folded into ``advance(dt)``).
+  * ``select_jnp``/``advance_jnp`` — jittable, used inside the TPU serving
+    engine's scheduling step.  ``tests/test_wlbvt.py`` asserts equivalence.
+
+Interpretation note (documented in DESIGN.md): Listing 1's
+``pu_limit = ceil(len(FMQs) * prio / prio_sum)`` reads as the *PU count*
+times the normalized priority — with ``len(FMQs)`` the paper's 128-FMQ
+constant the limit would never bind at 32 PUs, contradicting §5.3's
+"weighted PU occupation's upper limit guarantees fair QoS".  We use
+``ceil(num_pus * prio / prio_sum_active)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+try:  # jnp mirror (optional import so the simulator stays jax-free)
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jax = None
+
+BIG = 1e30
+
+
+# ---------------------------------------------------------------------------
+# numpy implementation (simulator)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class WLBVTState:
+    prio: np.ndarray            # (T,) float64, >0
+    total_occup: np.ndarray     # (T,) float64 — cumulative PU-cycles
+    bvt: np.ndarray             # (T,) float64 — active cycles
+    cur_occup: np.ndarray       # (T,) int64 — PUs currently held
+    queue_len: np.ndarray       # (T,) int64 — packets waiting
+
+    @classmethod
+    def create(cls, priorities) -> "WLBVTState":
+        p = np.asarray(priorities, np.float64)
+        T = p.shape[0]
+        return cls(prio=p.copy(),
+                   total_occup=np.zeros(T), bvt=np.zeros(T),
+                   cur_occup=np.zeros(T, np.int64),
+                   queue_len=np.zeros(T, np.int64))
+
+    @property
+    def active(self) -> np.ndarray:
+        return (self.queue_len > 0) | (self.cur_occup > 0)
+
+    def tput(self) -> np.ndarray:
+        return self.total_occup / np.maximum(self.bvt, 1.0)
+
+
+def advance(st: WLBVTState, dt: float) -> None:
+    """Fold `dt` cycles of update_tput (paper lines 8-13) in one step."""
+    act = st.active
+    st.total_occup[act] += st.cur_occup[act] * dt
+    st.bvt[act] += dt
+
+
+def pu_limit(st: WLBVTState, num_pus: int) -> np.ndarray:
+    # Listing 1 line 4-5: prio_sum over *non-empty* FMQs — queues that
+    # drained release their share immediately (work conservation).
+    # The 1e-6 pre-ceil epsilon makes the hardware-width (fp32) and
+    # reference (fp64) implementations agree at exact-integer boundaries.
+    nonempty = st.queue_len > 0
+    psum = float(st.prio[nonempty].sum())
+    if psum <= 0:
+        return np.full(st.prio.shape, num_pus, np.int64)
+    return np.ceil(num_pus * st.prio / psum - 1e-6).astype(np.int64)
+
+
+def select(st: WLBVTState, num_pus: int) -> int:
+    """Paper lines 15-24: non-empty FMQ under its weighted PU cap with the
+    lowest priority-normalized throughput.  Returns -1 if none eligible."""
+    limit = pu_limit(st, num_pus)
+    eligible = (st.queue_len > 0) & (st.cur_occup < limit)
+    if not eligible.any():
+        return -1
+    metric = np.where(eligible, st.tput() / st.prio, BIG)
+    return int(np.argmin(metric))
+
+
+def select_rr(rr_ptr: int, queue_len: np.ndarray) -> tuple:
+    """Plain round-robin baseline (paper Fig. 4/9).  Returns (idx, new_ptr)."""
+    T = queue_len.shape[0]
+    for k in range(T):
+        i = (rr_ptr + k) % T
+        if queue_len[i] > 0:
+            return i, (i + 1) % T
+    return -1, rr_ptr
+
+
+# ---------------------------------------------------------------------------
+# jnp mirror (serving engine — jittable)
+# ---------------------------------------------------------------------------
+def init_state_jnp(priorities):
+    p = jnp.asarray(priorities, jnp.float32)
+    T = p.shape[0]
+    return {
+        "prio": p,
+        "total_occup": jnp.zeros((T,), jnp.float32),
+        "bvt": jnp.zeros((T,), jnp.float32),
+        "cur_occup": jnp.zeros((T,), jnp.int32),
+        "queue_len": jnp.zeros((T,), jnp.int32),
+    }
+
+
+def advance_jnp(st: dict, dt) -> dict:
+    act = (st["queue_len"] > 0) | (st["cur_occup"] > 0)
+    dt = jnp.asarray(dt, jnp.float32)
+    return dict(
+        st,
+        total_occup=st["total_occup"]
+        + jnp.where(act, st["cur_occup"].astype(jnp.float32) * dt, 0.0),
+        bvt=st["bvt"] + jnp.where(act, dt, 0.0),
+    )
+
+
+def pu_limit_jnp(st: dict, num_pus: int):
+    nonempty = st["queue_len"] > 0
+    psum = jnp.sum(jnp.where(nonempty, st["prio"], 0.0))
+    return jnp.where(
+        psum > 0,
+        jnp.ceil(num_pus * st["prio"] / jnp.maximum(psum, 1e-9) - 1e-6),
+        float(num_pus)).astype(jnp.int32)
+
+
+def select_jnp(st: dict, num_pus: int):
+    """Returns idx (int32, -1 if none eligible)."""
+    limit = pu_limit_jnp(st, num_pus)
+    tput = st["total_occup"] / jnp.maximum(st["bvt"], 1.0)
+    eligible = (st["queue_len"] > 0) & (st["cur_occup"] < limit)
+    metric = jnp.where(eligible, tput / st["prio"], BIG)
+    idx = jnp.argmin(metric)
+    return jnp.where(jnp.any(eligible), idx, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Deficit Weighted Round Robin (IO arbitration — paper §5.1 step 5, §6.2)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DWRRState:
+    weights: np.ndarray        # (Q,) float
+    deficit: np.ndarray        # (Q,) float — bytes of credit
+    ptr: int = 0
+
+    @classmethod
+    def create(cls, weights) -> "DWRRState":
+        w = np.asarray(weights, np.float64)
+        return cls(weights=w, deficit=np.zeros_like(w))
+
+
+def dwrr_select(st: DWRRState, head_size: np.ndarray, pending: np.ndarray,
+                quantum: float) -> int:
+    """Pick the next queue whose head fragment fits its deficit.
+
+    head_size: (Q,) bytes; pending: (Q,) bool.  Returns queue idx (its
+    deficit is charged) or -1 if nothing pending.  Deficit top-up jumps
+    directly to the first round at which *some* pending queue becomes
+    eligible (O(1) virtual-time advance — equivalent to iterating rounds,
+    robust to heads many quanta large), then grants in round-robin order
+    from the saved pointer.  Idle queues cannot hoard more than one
+    head+quantum of credit.
+    """
+    Q = st.weights.shape[0]
+    if not pending.any():
+        return -1
+
+    def grant() -> int:
+        for k in range(Q):
+            i = (st.ptr + k) % Q
+            if pending[i] and st.deficit[i] >= head_size[i] - 1e-9:
+                st.deficit[i] -= head_size[i]
+                st.ptr = (i + 1) % Q
+                return i
+        return -1
+
+    got = grant()                     # spend credit from earlier rounds
+    if got >= 0:
+        return got
+    inc = quantum * st.weights
+    need = np.where(pending, head_size - st.deficit, np.inf)
+    rounds = int(np.ceil(np.maximum(need, 0.0)[pending]
+                         / inc[pending]).min())
+    st.deficit[pending] += max(rounds, 1) * inc[pending]
+    # idle credit cap: at most one head + one round of quantum
+    np.minimum(st.deficit, head_size + inc, out=st.deficit)
+    return grant()

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot-spots (ops.py = jit'd wrappers,
+ref.py = pure-jnp oracles; every kernel validated in interpret mode)."""

@@ -1,0 +1,111 @@
+"""Flash-decode Pallas TPU kernel: one query token against a long KV cache.
+
+TPU adaptation: the KV cache streams HBM->VMEM in (bk, d) blocks along the
+sequential innermost grid axis while the single query row and the fp32
+online-softmax accumulator stay VMEM-resident.  GQA query heads for the
+same KV head are folded into the row dimension of the query block, so the
+MXU sees a (G, d) x (d, bk) matmul instead of G rank-1 products.  Cache
+validity comes from per-row ``lengths`` (kpos < length) — the ring-buffer
+semantics of the serving engine — plus an optional sliding window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                   scale: float, window: int, cap: float, bk: int,
+                   seq_k: int):
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    length = len_ref[pl.program_id(0)]                   # this row's fill
+    k_start = ik * bk
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (G, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bk)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < length) & (kpos < seq_k)
+        if window:
+            mask &= (length - kpos) <= window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc[...] = acc[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v).astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "cap", "bk", "interpret"))
+def decode_attention_folded(q, k, v, lengths, *, scale: float,
+                            window: int = 0, cap: float = 0.0,
+                            bk: int = 512, interpret: bool = False):
+    """q: (BHkv, G, D) folded GQA query rows; k/v: (BHkv, T, D);
+    lengths: (BHkv,) int32 valid cache entries per row.
+    Returns (BHkv, G, D)."""
+    BH, G, D = q.shape
+    T = k.shape[1]
+    bk_ = min(bk, T)
+    nk = -(-T // bk_)
+    pad_k = nk * bk_ - T
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               cap=cap, bk=bk_, seq_k=T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, ik, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, bk_, D), lambda bh, ik, lens: (bh, ik, 0)),
+            pl.BlockSpec((1, bk_, D), lambda bh, ik, lens: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, ik, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+
+    def _index_lengths(bh, ik, lens):  # pragma: no cover (spec helper)
+        return lens
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)
+    return out

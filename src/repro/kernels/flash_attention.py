@@ -1,0 +1,136 @@
+"""FlashAttention forward Pallas TPU kernel.
+
+TPU adaptation of the memory-hierarchy insight: stream K/V blocks from
+HBM through VMEM while the (bq, d) query block and the (bq, d) fp32
+accumulator stay resident in VMEM; the online-softmax running max/sum
+avoids materializing the S×T score matrix.  The innermost grid axis (KV
+blocks) is sequential on TPU, so the accumulator lives in VMEM scratch
+across iterations.  Supports GQA (query-head folding), causal masking,
+sliding window, and gemma2 logit soft-capping.  Fully-masked KV blocks
+are skipped via @pl.when (no MXU work for the upper triangle).
+
+Block shapes default to (128, 128): MXU-aligned (multiples of 128) and
+VMEM-sized — q/k/v/acc blocks at d=256 occupy ~0.5 MiB of the ~128 MiB
+VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                  scale: float, causal: bool, window: int, cap: float,
+                  bq: int, bk: int, seq_q: int, seq_k: int, groups: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level reachability: skip fully-masked KV blocks (positions are
+    # row // groups in the GQA-folded layout)
+    q_lo = q_start // groups
+    q_hi = (q_start + bq - 1) // groups
+    reachable = True
+    if causal:
+        reachable = k_start <= q_hi
+    if window:
+        in_window = q_lo - (k_start + bk - 1) < window
+        reachable = jnp.logical_and(reachable, in_window) \
+            if causal else in_window
+
+    @pl.when(reachable if not isinstance(reachable, bool) else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        qrow = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        qpos = qrow // groups          # folded rows are position-major
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (kpos < seq_k)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc[...] = acc[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v).astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("groups", "scale", "causal", "window", "cap", "bq",
+                     "bk", "interpret"))
+def flash_attention_folded(q, k, v, *, groups: int = 1, scale: float,
+                           causal: bool = True,
+                           window: int = 0, cap: float = 0.0, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
+    """q: (BHkv, S*G, D) with G query rows per position (GQA-folded,
+    position-major: row = s*G + g, so the causal mask uses row // G);
+    k/v: (BHkv, T, D).  Returns (BHkv, S*G, D)."""
+    BH, SG, D = q.shape
+    T = k.shape[1]
+    seq_q = SG // groups
+    bq_ = min(bq, SG)
+    bk_ = min(bk, T)
+    nq = -(-SG // bq_)
+    nk = -(-T // bk_)
+    pad_q = nq * bq_ - SG
+    pad_k = nk * bk_ - T
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        bq=bq_, bk=bk_, seq_q=SG, seq_k=T, groups=groups)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk_, D), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, bk_, D), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * bq_, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, D), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :SG]
+
+
+flash_attention_folded.groups = 1  # set by ops.flash_attention per call

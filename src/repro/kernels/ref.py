@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (sequential/naive forms —
+the strongest possible references; kernels must match these allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                        window: int = 0, cap: float = 0.0) -> jnp.ndarray:
+    """q: (B,S,Hq,D), k/v: (B,T,Hkv,D) -> (B,S,Hq,D).  Full-matrix softmax."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bshgd,bthd->bshgt", qf, k.astype(jnp.float32))
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: float, window: int = 0,
+                         cap: float = 0.0) -> jnp.ndarray:
+    """q: (B,1,Hq,D); k/v: (B,T,Hkv,D); lengths: (B,) valid cache entries.
+    Query position = lengths (appended token)."""
+    B, _, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, k.astype(jnp.float32))
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos < lengths[:, None]
+    if window:
+        mask &= lengths[:, None] - kpos <= window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = p * mask[:, None, None, :]
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A_log, B_mat, C_mat,
+                 init_state=None):
+    """Sequential SSD recurrence (mamba2 §sec 3): the oracle.
+
+    x: (B,S,H,P); dt: (B,S,H); A_log: (H,); B_mat/C_mat: (B,S,G,N).
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t;  y_t = C_t . h_t.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    Bf = jnp.repeat(B_mat.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(C_mat.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]      # (B,H,1,1)
+        h = h * decay + jnp.einsum("bhn,bh,bhp->bhpn", Bt, dtt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    ts = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+          Bf.swapaxes(0, 1), Cf.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, ts)
+    return ys.swapaxes(0, 1).astype(x.dtype), h
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.
+    a, b: (B,S,W) fp32.  Returns (h (B,S,W), h_last (B,W))."""
+    B, S, W = a.shape
+
+    def step(h, t):
+        at, bt = t
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+    h, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h

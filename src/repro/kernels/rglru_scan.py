@@ -1,0 +1,84 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel: h_t = a_t * h_{t-1} + b_t.
+
+The recurrence is diagonal (per-channel), so channels map onto VPU lanes:
+the grid tiles (channels / bw) x (sequence / bs) with the sequence axis
+innermost (sequential); the (1, bw) carry lives in VMEM scratch.  Inside a
+block a fori_loop steps bs rows — each step is one (bw,)-wide VPU fma —
+while the next (bs, bw) tile streams from HBM.  This is the TPU analogue
+of the fused CUDA linear-scan: the carry never leaves registers/VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hlast_ref, carry, *,
+                  bs: int):
+    isq = pl.program_id(2)
+    nsq = pl.num_programs(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        carry[...] = h0_ref[0][None, :]
+
+    a = a_ref[0]                              # (bs, bw) fp32
+    b = b_ref[0]
+
+    def step(i, h):
+        h = a[i][None, :] * h + b[i][None, :]
+        y_ref[0, i, :] = h[0]
+        return h
+
+    carry[...] = jax.lax.fori_loop(0, bs, step, carry[...])
+
+    @pl.when(isq == nsq - 1)
+    def _final():
+        hlast_ref[0] = carry[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bw", "interpret"))
+def rglru_scan(a, b, h0=None, *, bs: int = 256, bw: int = 128,
+               interpret: bool = False):
+    """a, b: (B, S, W) fp32; h0: (B, W) initial state.
+    Returns (h (B,S,W), h_last (B,W)) — matches ref.rglru_scan_ref."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    bs_ = min(bs, S)
+    bw_ = min(bw, W)
+    pad_s = (-S) % bs_
+    pad_w = (-W) % bw_
+    if pad_s or pad_w:
+        # a=1, b=0 padding is the identity recurrence (inert)
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_w)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_w)))
+    Sp, Wp = S + pad_s, W + pad_w
+
+    kernel = functools.partial(_rglru_kernel, bs=bs_)
+    h, hlast = pl.pallas_call(
+        kernel,
+        grid=(B, Wp // bw_, Sp // bs_),        # seq axis innermost/sequential
+        in_specs=[
+            pl.BlockSpec((1, bs_, bw_), lambda ib, iw, isq: (ib, isq, iw)),
+            pl.BlockSpec((1, bs_, bw_), lambda ib, iw, isq: (ib, isq, iw)),
+            pl.BlockSpec((1, bw_), lambda ib, iw, isq: (ib, iw)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs_, bw_), lambda ib, iw, isq: (ib, isq, iw)),
+            pl.BlockSpec((1, bw_), lambda ib, iw, isq: (ib, iw)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Wp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Wp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bw_), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return h[:, :S, :W], hlast[:, :W]

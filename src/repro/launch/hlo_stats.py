@@ -1,0 +1,356 @@
+"""Post-optimization HLO analyzer with while-loop trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers / grad-accumulation program under-reports FLOPs, bytes
+and collectives by the trip count.  This walker parses ``as_text()`` and
+evaluates the entry computation recursively:
+
+  * ``while``  -> body + cond cost x known_trip_count (backend_config)
+  * ``fusion``/``call`` -> called computation (FLOPs/collectives); fusion
+    HBM bytes = the fusion's own operands + result (interior values live
+    in registers/VMEM — the fused proxy for HBM traffic)
+  * ``dot``    -> 2 x result_elems x prod(contracting dims)
+  * ``convolution`` -> 2 x result_elems x window x in_features / groups
+  * elementwise/reduce -> 1 flop per element (matches HloCostAnalysis)
+  * collectives -> operand bytes per base opcode, multiplied through
+
+Returns per-device totals (the module is the post-SPMD partitioned one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "select", "compare", "and", "or", "xor", "not", "convert", "floor",
+    "ceil", "round-nearest-even", "sign", "cosine", "sine", "atan2",
+    "logistic", "exponential-minus-one", "log-plus-one", "clamp",
+    "remainder", "cbrt", "erf",
+}
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+
+
+def _shape_elems_bytes(s: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    table: Dict[str, str]          # value name -> result type string
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_opcode(rest: str) -> Tuple[str, str, int]:
+    """rest = '<type> <opcode>(...' -> (type_str, opcode, paren_idx)."""
+    rest = rest.strip()
+    if rest.startswith("("):                      # tuple type
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += (ch == "(") - (ch == ")")
+            if depth == 0:
+                break
+        type_str = rest[:i + 1]
+        tail = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        type_str = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    par = tail.find("(")
+    opcode = tail[:par].strip()
+    return type_str, opcode, len(rest) - len(tail) + par
+
+
+def _operand_names(rest: str, paren_idx: int) -> Tuple[List[str], str]:
+    depth, end = 0, paren_idx
+    for i in range(paren_idx, len(rest)):
+        depth += (rest[i] == "(") - (rest[i] == ")")
+        if depth == 0:
+            end = i
+            break
+    inside = rest[paren_idx + 1:end]
+    names = re.findall(r"%([\w\.\-]+)", inside)
+    return names, rest[end + 1:]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = Computation(m.group(1), [], {})
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            # register parameters from the header signature
+            hdr = line[line.find("(") + 1:]
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z]\w*\[[\d,]*\]))", hdr):
+                cur.table[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rest = mi.group(1), mi.group(2)
+        try:
+            type_str, opcode, par = _split_type_opcode(rest)
+            operands, attrs = _operand_names(rest, par)
+        except Exception:      # pragma: no cover — defensive
+            continue
+        cur.table[name] = type_str
+        cur.instrs.append(Instr(name, opcode, type_str, operands, attrs))
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, table: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.result_type)
+    lhs_type = table.get(ins.operands[0], "") if ins.operands else ""
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if not mm or not lhs_type:
+        return 0.0
+    dims = [int(x) for x in mm.group(1).split(",") if x]
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 0.0
+    lhs_dims = [int(x) for x in sm.group(2).split(",") if x]
+    k = 1
+    for d in dims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, table: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.result_type)
+    wm = re.search(r"window=\{[^}]*size=([\dx]+)", ins.rest)
+    win = 1
+    if wm:
+        for x in wm.group(1).split("x"):
+            win *= int(x)
+    groups = 1
+    gm = re.search(r"feature_group_count=(\d+)", ins.rest)
+    if gm:
+        groups = int(gm.group(1))
+    in_feat = 1
+    if len(ins.operands) >= 1:
+        lhs_type = table.get(ins.operands[0], "")
+        dl = re.search(r"dim_labels=(\w+)_", ins.rest)
+        sm = _SHAPE_RE.search(lhs_type)
+        if dl and sm:
+            labels = dl.group(1)
+            dims = [int(x) for x in sm.group(2).split(",") if x]
+            if "f" in labels and labels.index("f") < len(dims):
+                in_feat = dims[labels.index("f")]
+    return 2.0 * out_elems * win * in_feat / max(groups, 1)
+
+
+def _trip_count(rest: str) -> int:
+    m = re.search(r'known_trip_count[^\d]*(\d+)', rest)
+    return int(m.group(1)) if m else 1
+
+
+# ops that move/relabel data without materializing new HBM traffic once
+# fused on the target (convert pairs are CPU float-normalization artifacts
+# — TPU is bf16-native; real reads are counted at the consuming compute op)
+_MOVEMENT = {
+    "parameter", "constant", "convert", "bitcast", "reshape", "transpose",
+    "copy", "broadcast", "tuple", "get-tuple-element", "iota",
+    "dynamic-slice", "slice",
+}
+
+
+def _dus_update_bytes(comp: Optional[Computation]) -> Optional[int]:
+    """If the computation is an in-place buffer update — one
+    dynamic-update-slice / scatter surrounded only by data-movement ops
+    (the CPU float-normalization wraps the DUS in convert pairs) —
+    return the update operand's bytes."""
+    if comp is None or not comp.instrs:
+        return None
+    upd = None
+    for ins in comp.instrs:
+        if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+            if upd is not None:
+                return None          # more than one update: bail out
+            upd = _shape_elems_bytes(comp.table.get(ins.operands[1], ""))[1]
+        elif ins.opcode == "scatter" and len(ins.operands) >= 3:
+            if upd is not None:
+                return None
+            upd = _shape_elems_bytes(comp.table.get(ins.operands[2], ""))[1]
+        elif ins.opcode not in _MOVEMENT:
+            return None
+    return upd
+
+
+def _movement_only(comp: Optional[Computation]) -> bool:
+    if comp is None:
+        return False
+    return all(i.opcode in _MOVEMENT for i in comp.instrs)
+
+
+ZERO = {"flops": 0.0, "bytes": 0.0,
+        **{c: 0.0 for c in _COLLECTIVES}, "collective_bytes": 0.0,
+        **{c + "_count": 0.0 for c in _COLLECTIVES}}
+
+
+def _add(a: dict, b: dict, scale: float = 1.0) -> None:
+    for k, v in b.items():
+        a[k] = a.get(k, 0.0) + v * scale
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_module(text)
+    memo: Dict[str, dict] = {}
+
+    def ev(cname: str) -> dict:
+        if cname in memo:
+            return memo[cname]
+        total = dict(ZERO)
+        comp = comps.get(cname)
+        if comp is None:
+            memo[cname] = total
+            return total
+        memo[cname] = total          # guard against cycles
+        for ins in comp.instrs:
+            op = ins.opcode
+            _, out_bytes = _shape_elems_bytes(ins.result_type)
+            opd_bytes = sum(_shape_elems_bytes(comp.table.get(o, ""))[1]
+                            for o in ins.operands)
+            if op == "while":
+                bm = re.search(r"body=%([\w\.\-]+)", ins.rest)
+                cm = re.search(r"condition=%([\w\.\-]+)", ins.rest)
+                trip = _trip_count(ins.rest)
+                if bm:
+                    _add(total, ev(bm.group(1)), trip)
+                if cm:
+                    _add(total, ev(cm.group(1)), trip)
+                continue
+            if op == "fusion":
+                fm = re.search(r"calls=%([\w\.\-]+)", ins.rest)
+                if fm:
+                    called = comps.get(fm.group(1))
+                    inner = ev(fm.group(1))
+                    # flops + collectives from the interior; HBM bytes
+                    # only from the fusion boundary
+                    _add(total, {k: v for k, v in inner.items()
+                                 if k != "bytes"})
+                    # in-place update fusions (root = DUS/scatter on a
+                    # donated buffer): traffic = the written slice only
+                    upd = _dus_update_bytes(called)
+                    if upd is not None and ins.operands:
+                        big = max(_shape_elems_bytes(
+                            comp.table.get(o, ""))[1]
+                            for o in ins.operands)
+                        if big == out_bytes:
+                            total["bytes"] += max(
+                                opd_bytes - big, 0) + 2 * upd
+                            continue
+                    # pure data-movement fusions (convert/bitcast/slice
+                    # chains): CPU float-normalization artifacts; the real
+                    # read is counted at the consuming compute op
+                    if _movement_only(called):
+                        continue
+                total["bytes"] += out_bytes + opd_bytes
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place: read+write the update region only
+                ui = 1 if op == "dynamic-update-slice" else 2
+                upd = (_shape_elems_bytes(comp.table.get(
+                    ins.operands[ui], ""))[1]
+                    if len(ins.operands) > ui else 0)
+                total["bytes"] += 2 * upd
+                continue
+            if op in ("call", "async-start"):
+                fm = re.search(r"(?:to_apply|calls|called_computation)=%([\w\.\-]+)",
+                               ins.rest)
+                if fm:
+                    _add(total, ev(fm.group(1)))
+                continue
+            if op == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%([\w\.\-]+))", ins.rest)
+                names: List[str] = []
+                for grp, single in branches:
+                    if grp:
+                        names += re.findall(r"%([\w\.\-]+)", grp)
+                    if single:
+                        names.append(single)
+                if names:   # conservatively take the max-cost branch
+                    best = max((ev(n) for n in names),
+                               key=lambda d: d["flops"] + d["bytes"])
+                    _add(total, best)
+                continue
+            base = next((c for c in _COLLECTIVES
+                         if op == c or op == c + "-start"), None)
+            if base is not None:
+                total[base] += opd_bytes
+                total[base + "_count"] += 1
+                total["collective_bytes"] += opd_bytes
+                total["bytes"] += out_bytes + opd_bytes
+                continue
+            if op in _FREE or op.endswith("-done"):
+                continue
+            # generic instruction: memory proxy
+            total["bytes"] += out_bytes + opd_bytes
+            if op == "dot":
+                total["flops"] += _dot_flops(ins, comp.table)
+            elif op == "convolution":
+                total["flops"] += _conv_flops(ins, comp.table)
+            elif op in _ELEMENTWISE:
+                oe, _ = _shape_elems_bytes(ins.result_type)
+                total["flops"] += oe
+            elif op in ("reduce", "reduce-window"):
+                ie = sum(_shape_elems_bytes(comp.table.get(o, ""))[0]
+                         for o in ins.operands[: len(ins.operands) // 2])
+                total["flops"] += ie
+        memo[cname] = total
+        return total
+
+    if entry is None:      # pragma: no cover
+        return dict(ZERO)
+    return dict(ev(entry))

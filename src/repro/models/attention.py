@@ -1,0 +1,454 @@
+"""Attention: GQA/MQA/MHA + DeepSeek MLA, training and decode paths.
+
+Three implementations selected by ``cfg.attn_impl``:
+  * ``chunked`` — flash-style lax.scan over KV blocks in pure jnp.  O(S·D)
+    memory; this is the AOT dry-run path (memory analysis stays honest).
+  * ``pallas``  — Pallas TPU kernels (kernels/flash_attention.py,
+    kernels/decode_attention.py); validated in interpret mode on CPU.
+  * ``naive``   — full S×T score matrix; tiny-shape oracle only.
+
+Local-attention layers use a ring-buffer KV cache of ``window`` entries with
+stored absolute positions, so gemma2/recurrentgemma long-context decode
+memory is O(window), not O(context).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, LOCAL_ATTN
+from repro.models import layers as L
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> dict:
+    pd = L.pdtype_of(cfg)
+    d = cfg.d_model
+    if cfg.mla is not None:
+        m = cfg.mla
+        qd = cfg.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        ks = jax.random.split(key, 5)
+        return {
+            "wq": L.dense_init(ks[0], d, qd, pd),
+            "w_dkv": L.dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, pd),
+            "kv_norm": jnp.zeros((m.kv_lora_rank,), pd),
+            "w_uk": L.dense_init(ks[2], m.kv_lora_rank,
+                                 cfg.num_heads * m.qk_nope_head_dim, pd),
+            "w_uv": L.dense_init(ks[3], m.kv_lora_rank,
+                                 cfg.num_heads * m.v_head_dim, pd),
+            "wo": L.dense_init(ks[4], cfg.num_heads * m.v_head_dim, d, pd),
+        }
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, cfg.q_dim, pd),
+        "wk": L.dense_init(ks[1], d, cfg.kv_dim, pd),
+        "wv": L.dense_init(ks[2], d, cfg.kv_dim, pd),
+        "wo": L.dense_init(ks[3], cfg.q_dim, d, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), pd)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), pd)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), pd)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), pd)
+    return p
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> dict:
+    """Whisper decoder cross-attention (always dense MHA, no rope)."""
+    pd = L.pdtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, cfg.q_dim, pd),
+        "wk": L.dense_init(ks[1], d, cfg.q_dim, pd),
+        "wv": L.dense_init(ks[2], d, cfg.q_dim, pd),
+        "wo": L.dense_init(ks[3], cfg.q_dim, d, pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core chunked flash-style attention (pure jnp, scan over KV blocks)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, q_pos, k_pos, *, scale: float,
+                      causal: bool = True, window: int = 0,
+                      cap: float = 0.0, chunk: int = 512,
+                      k_valid=None, seg_q=None, seg_k=None,
+                      q_chunk: int = 4096) -> jnp.ndarray:
+    """Flash-style attention, pure jnp.  q: (B,S,Hq,Dk); k/v: (B,T,H,D*).
+
+    Long sequences are processed in ``q_chunk`` query blocks (unrolled,
+    static shapes).  For the causal self-attention layout (T == S, no
+    cache) each query block only multiplies against its *reachable* KV
+    prefix — and, for sliding-window layers, only the [lo, hi) KV band —
+    so HLO FLOPs stay at the banded/causal count instead of the full S·T
+    rectangle.  Within a block, a lax.scan streams KV chunks with an
+    online-softmax accumulator (O(S·D) memory).
+    """
+    B, S, Hq, Dk = q.shape
+    T = k.shape[1]
+    if S > q_chunk and S % q_chunk == 0 and q_pos.ndim == 2:
+        outs = []
+        for i in range(S // q_chunk):
+            sl = slice(i * q_chunk, (i + 1) * q_chunk)
+            qi, qpi = q[:, sl], q_pos[:, sl]
+            sqi = seg_q[:, sl] if seg_q is not None else None
+            if causal and k_valid is None and T == S:
+                hi = (i + 1) * q_chunk
+                lo = max(0, i * q_chunk - window + 1) if window else 0
+                lo = (lo // chunk) * chunk          # chunk-aligned band
+                ki, vi, kpi = k[:, lo:hi], v[:, lo:hi], k_pos[:, lo:hi]
+                ski = seg_k[:, lo:hi] if seg_k is not None else None
+            else:
+                ki, vi, kpi, ski = k, v, k_pos, seg_k
+            outs.append(_chunked_attention(
+                qi, ki, vi, qpi, kpi, scale=scale, causal=causal,
+                window=window, cap=cap, chunk=chunk, k_valid=k_valid,
+                seg_q=sqi, seg_k=ski))
+        return jnp.concatenate(outs, axis=1)
+    return _chunked_attention(q, k, v, q_pos, k_pos, scale=scale,
+                              causal=causal, window=window, cap=cap,
+                              chunk=chunk, k_valid=k_valid, seg_q=seg_q,
+                              seg_k=seg_k)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, *, scale: float,
+                       causal: bool = True, window: int = 0,
+                       cap: float = 0.0, chunk: int = 512,
+                       k_valid=None, seg_q=None, seg_k=None) -> jnp.ndarray:
+    """q: (B,S,Hq,Dk), k: (B,T,Hkv,Dk), v: (B,T,Hkv,Dv).
+
+    q_pos: (B,S) absolute positions of queries; k_pos: (B,T) of keys.
+    k_valid: (B,T) bool — entries that exist (cache fill mask).
+    Returns (B,S,Hq,Dv).  All accumulation in fp32.
+    """
+    B, S, Hq, Dk = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+
+    c = min(chunk, T)
+    n_chunks = -(-T // c)
+    pad = n_chunks * c - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        kv_mask = jnp.pad(
+            jnp.ones((B, T), bool) if k_valid is None else k_valid,
+            ((0, 0), (0, pad)))
+        if seg_k is not None:
+            seg_k = jnp.pad(seg_k, ((0, 0), (0, pad)), constant_values=-2)
+    else:
+        kv_mask = jnp.ones((B, T), bool) if k_valid is None else k_valid
+
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, S, Hkv, G, Dk)
+    kc = k.reshape(B, n_chunks, c, Hkv, Dk)
+    vc = v.reshape(B, n_chunks, c, Hkv, Dv)
+    pc = k_pos.reshape(B, n_chunks, c)
+    mc = kv_mask.reshape(B, n_chunks, c)
+    sc = seg_k.reshape(B, n_chunks, c) if seg_k is not None else None
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        if sc is None:
+            k_i, v_i, p_i, valid_i = xs
+            s_i = None
+        else:
+            k_i, v_i, p_i, valid_i, s_i = xs
+        # scores: (B, S, Hkv, G, c) — bf16 operands, fp32 MXU accumulation
+        s = jnp.einsum("bshgd,bchd->bshgc", qf, k_i,
+                       preferred_element_type=jnp.float32)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        mask = valid_i[:, None, :]                     # (B,1,c)
+        if causal:
+            mask = mask & (p_i[:, None, :] <= q_pos[:, :, None])
+        if window:
+            mask = mask & (q_pos[:, :, None] - p_i[:, None, :] < window)
+        if s_i is not None:
+            mask = mask & (s_i[:, None, :] == seg_q[:, :, None])
+        mask = mask[:, :, None, None, :]               # (B,S,1,1,c)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask       # masked probs
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, G, Dv), jnp.float32)
+    xs = (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc.swapaxes(0, 1),
+          mc.swapaxes(0, 1))
+    if sc is not None:
+        xs = xs + (sc.swapaxes(0, 1),)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, Hq, Dv).astype(q.dtype)
+
+
+def naive_attention(q, k, v, q_pos, k_pos, *, scale, causal=True, window=0,
+                    cap=0.0, k_valid=None, seg_q=None, seg_k=None):
+    """Full-score attention (decode path + tiny-shape oracle).
+
+    No fp32 materialization of k/v: the MXU consumes bf16 operands and
+    accumulates fp32 (``preferred_element_type``) — casting the KV cache
+    to fp32 would otherwise double decode HBM traffic (EXPERIMENTS.md
+    §Perf, decode hillclimb).  Probabilities are cast to v's dtype before
+    the PV matmul (standard TPU flash practice; exact when v is fp32).
+    """
+    B, S, Hq, Dk = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, S, Hkv, G, Dk)
+    s = jnp.einsum("bshgd,bthd->bshgt", qf, k,
+                   preferred_element_type=jnp.float32)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    mask = jnp.ones((B, S, k.shape[1]), bool)
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, :]
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    if seg_q is not None:
+        mask = mask & (seg_k[:, None, :] == seg_q[:, :, None])
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = p * mask[:, :, None, None, :]
+    out = jnp.einsum("bshgt,bthd->bshgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, Hq, -1).astype(q.dtype)
+
+
+def _run_attention(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, scale, causal,
+                   window, cap, k_valid=None, seg_q=None, seg_k=None):
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        if seg_q is None and k.shape[-1] == v.shape[-1]:
+            if q.shape[1] == 1:   # decode
+                return kops.decode_attention(
+                    q, k, v, q_pos[:, 0], scale=scale, window=window,
+                    cap=cap, interpret=kops.on_cpu())
+            if k_valid is None and q.shape[1] == k.shape[1]:
+                return kops.flash_attention(
+                    q, k, v, scale=scale, causal=causal, window=window,
+                    cap=cap, interpret=kops.on_cpu())
+        # fall through for unsupported combos
+    if cfg.attn_impl == "naive" or q.shape[1] == 1:
+        # decode (one query): the full-score einsum IS flash-decode FLOPs-
+        # wise, shards cleanly over a length- or head-partitioned cache
+        # (psum'd softmax reductions), and avoids lax.scan over a sharded
+        # KV axis.
+        return naive_attention(q, k, v, q_pos, k_pos, scale=scale,
+                               causal=causal, window=window, cap=cap,
+                               k_valid=k_valid, seg_q=seg_q, seg_k=seg_k)
+    return chunked_attention(q, k, v, q_pos, k_pos, scale=scale,
+                             causal=causal, window=window, cap=cap,
+                             chunk=cfg.attn_chunk, k_valid=k_valid,
+                             seg_q=seg_q, seg_k=seg_k)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> dict:
+    """Zeroed cache pytree for one attention layer."""
+    dt = L.dtype_of(cfg)
+    size = min(max_len, cfg.window_size) if (kind == LOCAL_ATTN and cfg.window_size) else max_len
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, size, m.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, size, m.qk_rope_head_dim), dt),
+            "pos": jnp.full((batch, size), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def _ring_write(buf: jnp.ndarray, new: jnp.ndarray, offsets: jnp.ndarray):
+    """Write `new` (B, P, ...) into ring buffer `buf` (B, T, ...) at
+    positions (offsets + arange(P)) mod T, per batch row."""
+    B, P = new.shape[:2]
+    T = buf.shape[1]
+    idx = (offsets[:, None] + jnp.arange(P)[None, :]) % T        # (B,P)
+    bidx = jnp.arange(B)[:, None].repeat(P, axis=1)
+    return buf.at[bidx, idx].set(new)
+
+
+def update_cache(cache: dict, new: dict, offsets: jnp.ndarray,
+                 positions: jnp.ndarray) -> dict:
+    """new: dict of (B,P,...) tensors; positions: (B,P) absolute positions."""
+    out = dict(cache)
+    for name, val in new.items():
+        out[name] = _ring_write(cache[name], val.astype(cache[name].dtype), offsets)
+    out["pos"] = _ring_write(cache["pos"], positions.astype(jnp.int32), offsets)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention layer
+# ---------------------------------------------------------------------------
+def attention_layer(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                    cfg: ModelConfig, kind: str,
+                    cache: Optional[dict] = None,
+                    cache_offset: Optional[jnp.ndarray] = None,
+                    seg: Optional[jnp.ndarray] = None,
+                    causal: bool = True,
+                    ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d).  Train/prefill: cache None or appended-to.  Decode: S small
+    (usually 1), cache required.  positions: (B,S) or (3,B,S) for M-RoPE."""
+    if cfg.mla is not None:
+        return _mla_layer(params, x, positions, cfg, cache, cache_offset)
+    dt = x.dtype
+    B, S, _ = x.shape
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        angles = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+        q = L.apply_rope(q, angles)
+        k = L.apply_rope(k, angles)
+
+    scale = cfg.attn_scale or (1.0 / math.sqrt(cfg.head_dim))
+    window = cfg.window_size if kind == LOCAL_ATTN else 0
+
+    if cache is None:
+        out = _run_attention(cfg, q, k, v, pos2d, pos2d, scale=scale,
+                             causal=causal, window=window,
+                             cap=cfg.attn_softcap, seg_q=seg, seg_k=seg)
+    else:
+        cache = update_cache(cache, {"k": k, "v": v}, cache_offset, pos2d)
+        k_valid = cache["pos"] >= 0
+        out = _run_attention(cfg, q, cache["k"], cache["v"], pos2d,
+                             cache["pos"], scale=scale, causal=causal,
+                             window=window, cap=cfg.attn_softcap,
+                             k_valid=k_valid)
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(dt)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): expanded for train/prefill, absorbed-MQA for decode
+# ---------------------------------------------------------------------------
+def _mla_project_q(params, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(
+        B, S, cfg.num_heads, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    angles = L.rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, angles)
+    return q_nope, q_rope, angles
+
+
+def _mla_latent(params, x, cfg, angles):
+    m = cfg.mla
+    dt = x.dtype
+    ckr = x @ params["w_dkv"].astype(dt)
+    ckv, k_rope = ckr[..., :m.kv_lora_rank], ckr[..., m.kv_lora_rank:]
+    ckv = L.rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], angles)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def _mla_layer(params, x, positions, cfg, cache, cache_offset):
+    m = cfg.mla
+    B, S, _ = x.shape
+    dt = x.dtype
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope, angles = _mla_project_q(params, x, cfg, positions)
+    ckv, k_rope = _mla_latent(params, x, cfg, angles)
+
+    w_uk = params["w_uk"].astype(dt).reshape(
+        m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim)
+    w_uv = params["w_uv"].astype(dt).reshape(
+        m.kv_lora_rank, cfg.num_heads, m.v_head_dim)
+
+    if cache is None:
+        # expanded path: materialize per-head k/v from the latent
+        k_nope = jnp.einsum("btr,rhd->bthd", ckv, w_uk)
+        v = jnp.einsum("btr,rhd->bthd", ckv, w_uv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, cfg.num_heads, m.qk_rope_head_dim))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _run_attention(cfg, q, k, v, pos2d, pos2d, scale=scale,
+                             causal=True, window=0, cap=0.0)
+        new_cache = None
+    else:
+        # absorbed path: attention in latent space == MQA with Dk=rank+rope,
+        # Dv=rank.  Cache stores only (ckv, k_rope): the MLA memory win.
+        cache = update_cache(cache, {"ckv": ckv, "krope": k_rope},
+                             cache_offset, pos2d)
+        new_cache = cache
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+        q_abs = jnp.concatenate([q_lat, q_rope], axis=-1)
+        k_abs = jnp.concatenate([cache["ckv"], cache["krope"]],
+                                axis=-1)[:, :, None, :]
+        v_abs = cache["ckv"][:, :, None, :]
+        k_valid = cache["pos"] >= 0
+        ctx = _run_attention(cfg, q_abs, k_abs, v_abs, pos2d, cache["pos"],
+                             scale=scale, causal=True, window=0, cap=0.0,
+                             k_valid=k_valid)
+        out = jnp.einsum("bshr,rhd->bshd", ctx, w_uv)
+    out = out.reshape(B, S, cfg.num_heads * m.v_head_dim)
+    return out @ params["wo"].astype(dt), new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_attention_layer(params, x, enc_kv, cfg: ModelConfig):
+    """enc_kv: (k, v) precomputed from encoder output, (B,T,H,D)."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    k, v = enc_kv
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    pos_q = jnp.zeros((B, S), jnp.int32)
+    pos_k = jnp.zeros((B, T), jnp.int32)
+    out = _run_attention(cfg, q, k, v, pos_q, pos_k, scale=scale,
+                         causal=False, window=0, cap=0.0)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(dt)
+
+
+def encode_cross_kv(params, enc_out, cfg: ModelConfig):
+    dt = enc_out.dtype
+    B, T, _ = enc_out.shape
+    k = (enc_out @ params["wk"].astype(dt)).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"].astype(dt)).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    return k, v

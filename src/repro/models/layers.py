@@ -1,0 +1,149 @@
+"""Shared model building blocks (functional, no framework deps).
+
+Params are nested dicts of jnp arrays; every module is an (init, apply)
+pair.  Norms/softmax/router run in fp32; matmuls in ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterization: init at zeros == identity
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name}")
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    dt = x.dtype
+    gate = act_fn(act)(x @ params["w_gate"].astype(dt))
+    up = x @ params["w_up"].astype(dt)
+    return (gate * up) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """positions: (B, S) or (3, B, S) for M-RoPE -> angles (B, S, half)."""
+    inv = rope_freqs(head_dim, theta)                       # (half,)
+    if positions.ndim == 3:                                 # M-RoPE (t, h, w)
+        if not mrope_sections:
+            positions = positions[0]
+        else:
+            half = head_dim // 2
+            sec_id = jnp.repeat(
+                jnp.arange(len(mrope_sections)),
+                jnp.array(mrope_sections),
+                total_repeat_length=half)                   # (half,)
+            # pick, per freq index, the position stream of its section
+            pos = positions.astype(jnp.float32)             # (3, B, S)
+            pos_sel = jnp.take(pos, sec_id, axis=0)         # (half, B, S)
+            return jnp.einsum("hbs,h->bsh", pos_sel, inv)
+    return positions.astype(jnp.float32)[..., None] * inv   # (B, S, half)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); angles: (B, S, D/2) — NeoX rotate-half convention."""
+    half = x.shape[-1] // 2
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jnp.ndarray:
+    """Parameter-free absolute positions (whisper backbone)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig,
+                 scale: Optional[float] = None) -> jnp.ndarray:
+    x = jnp.take(table, tokens, axis=0).astype(dtype_of(cfg))
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(x: jnp.ndarray, embed_table: jnp.ndarray,
+              head: Optional[jnp.ndarray], cfg: ModelConfig) -> jnp.ndarray:
+    table = embed_table if head is None else head
+    logits = x @ (table.T if head is None else head).astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with two dispatch implementations.
+
+``gshard`` — capacity-based one-hot dispatch/combine einsums.  Shards
+cleanly under automatic SPMD (experts over the ``model`` axis => all-to-all)
+but its dispatch matmuls are O(T²) HLO FLOPs — this is the paper-faithful
+*baseline* for the MoE roofline cells.
+
+``ragged`` — sort tokens by expert, grouped matmul via ``jax.lax.ragged_dot``.
+O(T·k·d·f) FLOPs; the beyond-paper optimized path (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+MOE_IMPL = ("gshard", "ragged")
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    pd = L.pdtype_of(cfg)
+    d, f, E = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * 0.02).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(pd),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(pd),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / jnp.sqrt(f)).astype(pd),
+    }
+    if m.num_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, m.num_shared_experts * f, pd)
+    return p
+
+
+def router_topk(params, x2d: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x2d: (T, d) -> (weights (T,k), experts (T,k) int32, aux_loss scalar)."""
+    m = cfg.moe
+    logits = x2d.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    T = x2d.shape[0]
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce = jnp.sum(jax.nn.one_hot(idx[:, 0], m.num_experts), axis=0) / T
+    aux = m.num_experts * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, h, act: str):
+    """h: (g, E, C, d) grouped tokens vs stacked expert weights (E, d, f)."""
+    g = L.act_fn(act)(jnp.einsum("gecd,edf->gecf", h, w_gate))
+    u = jnp.einsum("gecd,edf->gecf", h, w_up)
+    return jnp.einsum("gecf,efd->gecd", g * u, w_down)
+
+
+def apply_moe_gshard(params, x: jnp.ndarray, cfg: ModelConfig,
+                     capacity_factor: float = 0.0,
+                     group_size: int = 2048):
+    """Grouped capacity-based dispatch (GShard).  x: (B,S,d) -> (B,S,d).
+
+    Tokens are dispatched within fixed-size *groups* (the GShard
+    formulation): the position-in-expert cumsum and the capacity C are
+    per-group, so the (t,e,c) dispatch/combine tensors stay
+    O(group x E x C) instead of O(T x E x C) — with global capacity the
+    dispatch matmuls cost ~E.C/(k.3.f) = 300x the expert FFN at 1M-token
+    prefills (EXPERIMENTS.md §Perf, MoE hillclimb).  Groups ride the DP
+    axes (g over 'data', experts over 'model' => all-to-all dispatch).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    dt = x.dtype
+    T = B * S
+    x2d = x.reshape(T, d)
+    w, idx, aux = router_topk(params, x2d, cfg)
+    cf = capacity_factor or m.capacity_factor
+
+    Gsz = min(group_size, T)
+    nG = -(-T // Gsz)
+    pad = nG * Gsz - T
+    if pad:  # padded tokens: keep=False via zero weights / expert -1
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        idx = jnp.pad(idx, ((0, pad), (0, 0)), constant_values=-1)
+    C = max(1, int(Gsz * m.top_k * cf / m.num_experts))
+
+    xg = x2d.reshape(nG, Gsz, d)
+    idxg = idx.reshape(nG, Gsz, m.top_k)
+    wg = w.reshape(nG, Gsz, m.top_k)
+    from repro.distributed.sharding import constrain_acts
+    xg = constrain_acts(xg)
+
+    # position of each (token, choice) inside its expert queue, per group
+    onehot = jax.nn.one_hot(idxg, m.num_experts, dtype=jnp.int32)  # (g,t,k,E)
+    flat = onehot.reshape(nG, Gsz * m.top_k, m.num_experts)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                      # (g,tk,E)
+    pos_in_e = jnp.max(pos.reshape(nG, Gsz, m.top_k, m.num_experts),
+                       axis=-1)                                    # (g,t,k)
+    keep = (pos_in_e < C) & (idxg >= 0)
+    wk = wg * keep
+
+    e_oh = jax.nn.one_hot(idxg, m.num_experts, dtype=dt)           # (g,t,k,E)
+    c_oh = jax.nn.one_hot(jnp.clip(pos_in_e, 0, C - 1), C, dtype=dt)
+    dispatch = jnp.einsum("gtke,gtkc->gtec",
+                          e_oh * keep[..., None].astype(dt), c_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", e_oh, c_oh,
+                         wk.astype(dt))
+
+    h = jnp.einsum("gtec,gtd->gecd", dispatch, xg)                 # (g,E,C,d)
+    out_e = _expert_ffn(params["w_gate"].astype(dt),
+                        params["w_up"].astype(dt),
+                        params["w_down"].astype(dt), h, cfg.mlp_act)
+    y = jnp.einsum("gtec,gecd->gtd", combine, out_e)
+    y = y.reshape(nG * Gsz, d)[:T].reshape(B, S, d)
+    if m.num_shared_experts:
+        y = y + L.apply_mlp(params["shared"], x, cfg.mlp_act)
+    return y, aux
+
+
+def apply_moe_ragged(params, x: jnp.ndarray, cfg: ModelConfig):
+    """Sort + ragged_dot grouped matmul (optimized).  x: (B,S,d)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    dt = x.dtype
+    T = B * S
+    x2d = x.reshape(T, d)
+    w, idx, aux = router_topk(params, x2d, cfg)
+
+    flat_e = idx.reshape(-1)                                        # (T*k,)
+    order = jnp.argsort(flat_e)
+    tok = jnp.repeat(jnp.arange(T), m.top_k)[order]                 # source row
+    xs = x2d[tok]                                                   # (T*k, d)
+    group_sizes = jnp.bincount(flat_e, length=m.num_experts).astype(jnp.int32)
+
+    g = L.act_fn(cfg.mlp_act)(
+        jax.lax.ragged_dot(xs, params["w_gate"].astype(dt), group_sizes))
+    u = jax.lax.ragged_dot(xs, params["w_up"].astype(dt), group_sizes)
+    o = jax.lax.ragged_dot(g * u, params["w_down"].astype(dt), group_sizes)
+
+    wsorted = w.reshape(-1)[order].astype(dt)                       # (T*k,)
+    y = jnp.zeros((T, d), dt).at[tok].add(o * wsorted[:, None])
+    y = y.reshape(B, S, d)
+    if m.num_shared_experts:
+        y = y + L.apply_mlp(params["shared"], x, cfg.mlp_act)
+    return y, aux
+
+
+def apply_moe(params, x, cfg: ModelConfig, impl: str = "gshard"):
+    if impl == "ragged":
+        return apply_moe_ragged(params, x, cfg)
+    return apply_moe_gshard(params, x, cfg)

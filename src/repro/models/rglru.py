@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+Training/prefill parallelizes the linear recurrence with
+``jax.lax.associative_scan``; decode is the O(1) update.  Gates are
+diagonal (per-channel) rather than block-diagonal — documented deviation
+(DESIGN.md §5); a Pallas linear-scan kernel lives in kernels/rglru_scan.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    pd = L.pdtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": L.dense_init(ks[0], cfg.d_model, w, pd),
+        "w_gate": L.dense_init(ks[1], cfg.d_model, w, pd),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, w), jnp.float32)
+                   * (1.0 / jnp.sqrt(cfg.conv1d_width))).astype(pd),
+        "conv_b": jnp.zeros((w,), pd),
+        "lambda_": jnp.full((w,), 2.0, jnp.float32),   # softplus^-1-ish init
+        "a_gate_w": jnp.ones((w,), jnp.float32),
+        "a_gate_b": jnp.zeros((w,), jnp.float32),
+        "i_gate_w": jnp.ones((w,), jnp.float32),
+        "i_gate_b": jnp.zeros((w,), jnp.float32),
+        "w_out": L.dense_init(jax.random.fold_in(key, 7), w, cfg.d_model, pd),
+    }
+
+
+def _conv(x, w, b, state, valid_n=None):
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(W))
+    if valid_n is None:
+        new_state = xx[:, -(W - 1):, :]
+    else:  # ragged chunk: state ends at the last *valid* token
+        idx = valid_n[:, None] + jnp.arange(W - 1)[None, :]
+        new_state = jnp.take_along_axis(xx, idx[..., None], axis=1)
+    return y + b.astype(x.dtype), new_state
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * params["a_gate_w"] + params["a_gate_b"])
+    i = jax.nn.sigmoid(uf * params["i_gate_w"] + params["i_gate_b"])
+    log_a = -_C * jax.nn.softplus(params["lambda_"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), L.dtype_of(cfg)),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_block(params, x, cfg: ModelConfig,
+                cache: Optional[dict] = None,
+                valid: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d) -> (B,S,d).  ``valid`` (B,S): pad tokens get a=1, b=0
+    (identity recurrence) so ragged chunk tails are exactly inert."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt), approximate=True)
+    u = x @ params["w_x"].astype(dt)
+    conv_state = cache["conv"] if cache is not None else None
+    vn = valid.sum(-1).astype(jnp.int32) if valid is not None else None
+    u, new_conv = _conv(u, params["conv_w"], params["conv_b"], conv_state,
+                        valid_n=vn)
+    a, b = _gates(params, u)                     # (B,S,w) fp32
+    if valid is not None:
+        v = valid[..., None]
+        a = jnp.where(v, a, 1.0)
+        b = jnp.where(v, b, 0.0)
+
+    if cache is not None and x.shape[1] == 1:
+        h = a[:, 0] * cache["h"] + b[:, 0]
+        hs = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        def combine(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+        A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = Bc
+        if cache is not None:
+            hs = hs + A * cache["h"][:, None, :]
+            new_cache = {"conv": new_conv, "h": hs[:, -1]}
+        else:
+            new_cache = None
+    out = (gate * hs.astype(dt)) @ params["w_out"].astype(dt)
+    return out, new_cache

@@ -1,0 +1,228 @@
+"""Mamba-2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic term
++ inter-chunk linear recurrence, lax.scan over chunks) — the TPU-native
+adaptation of the paper's block decomposition; a Pallas kernel version
+lives in kernels/ssd_scan.py.  Decode is the O(1) recurrent update.
+
+Projections are kept *separate* (w_z / w_x / w_B / w_C / w_dt + per-stream
+depthwise convs) rather than one fused in_proj: head-aligned output dims
+(d_in, nheads) then shard cleanly over the ``model`` mesh axis (Mamba TP),
+while the small shared B/C streams stay replicated.  Same parameter count
+as the fused form.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    gn = s.n_groups * s.state_dim
+    return s, d_in, nheads, gn
+
+
+def init_ssd(key, cfg: ModelConfig) -> dict:
+    s, d_in, nheads, gn = _dims(cfg)
+    pd = L.pdtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": L.dense_init(ks[0], d, d_in, pd),
+        "w_x": L.dense_init(ks[1], d, d_in, pd),
+        "w_B": L.dense_init(ks[2], d, gn, pd),
+        "w_C": L.dense_init(ks[3], d, gn, pd),
+        "w_dt": L.dense_init(ks[4], d, nheads, pd),
+        "conv_x_w": (jax.random.normal(ks[5], (s.conv_dim, d_in), jnp.float32)
+                     * (1.0 / jnp.sqrt(s.conv_dim))).astype(pd),
+        "conv_x_b": jnp.zeros((d_in,), pd),
+        "conv_B_w": (jax.random.normal(ks[6], (s.conv_dim, gn), jnp.float32)
+                     * (1.0 / jnp.sqrt(s.conv_dim))).astype(pd),
+        "conv_B_b": jnp.zeros((gn,), pd),
+        "conv_C_w": (jax.random.normal(ks[7], (s.conv_dim, gn), jnp.float32)
+                     * (1.0 / jnp.sqrt(s.conv_dim))).astype(pd),
+        "conv_C_b": jnp.zeros((gn,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), pd),
+        "out_proj": L.dense_init(ks[8], d_in, d, pd),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None, act: bool = True,
+                 valid_n: Optional[jnp.ndarray] = None):
+    """x: (B,S,C); w: (W,C) depthwise.  Returns (y, new_state (B,W-1,C)).
+
+    ``valid_n`` (B,): only the first valid_n tokens of each row are real
+    (ragged chunked prefill) — the carried state then ends at the last
+    *valid* token instead of the last position.
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)              # (B, S+W-1, C)
+    y = sum(xx[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(W))
+    if W > 1:
+        if valid_n is None:
+            new_state = xx[:, -(W - 1):, :]
+        else:
+            idx = valid_n[:, None] + jnp.arange(W - 1)[None, :]   # (B,W-1)
+            new_state = jnp.take_along_axis(xx, idx[..., None], axis=1)
+    else:  # pragma: no cover
+        new_state = state
+    y = y + b.astype(x.dtype)
+    return (jax.nn.silu(y) if act else y), new_state
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Q) -> (..., Q, Q) cumulative segment sums, -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_mat, C_mat, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); B_mat/C_mat: (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  fp32 internally.
+    """
+    Bb, S_in, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    Q = min(chunk, S_in)
+    pad = (-S_in) % Q
+    if pad:  # zero dt => zero decay/contribution: padding is inert
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S_in + pad
+    nc = S // Q
+    rep = H // G
+
+    xf = x.astype(jnp.float32).reshape(Bb, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, Q, H)
+    Bf = jnp.repeat(B_mat.astype(jnp.float32), rep, axis=2).reshape(Bb, nc, Q, H, N)
+    Cf = jnp.repeat(C_mat.astype(jnp.float32), rep, axis=2).reshape(Bb, nc, Q, H, N)
+    dA = dtf * (-jnp.exp(A.astype(jnp.float32)))[None, None, None, :]  # (B,nc,Q,H)
+
+    def body(state, xs):
+        xc, dtc, Bc, Cc, dAc = xs          # (B,Q,H,P) (B,Q,H) (B,Q,H,N) ...
+        dAc_h = dAc.swapaxes(1, 2)          # (B,H,Q)
+        Lmat = jnp.exp(_segsum(dAc_h))      # (B,H,Q,Q)
+        # intra-chunk (quadratic within the chunk)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Cc, Bc) * Lmat
+        y_intra = jnp.einsum("bhqk,bkh,bkhp->bqhp", scores, dtc, xc)
+        # contribution of the carried state
+        decay_in = jnp.exp(jnp.cumsum(dAc_h, axis=-1))       # (B,H,Q)
+        y_inter = jnp.einsum("bqhn,bhpn,bhq->bqhp", Cc, state, decay_in)
+        # new carried state
+        decay_out = jnp.exp(jnp.cumsum(dAc_h[..., ::-1], axis=-1)[..., ::-1]
+                            - dAc_h)                          # exp(sum_{j>i} dA)
+        new_state = state * jnp.exp(jnp.sum(dAc_h, axis=-1))[..., None, None] \
+            + jnp.einsum("bqhn,bhq,bqh,bqhp->bhpn", Bc, decay_out, dtc, xc)
+        return new_state, y_intra + y_inter
+
+    state0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    xs = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), Bf.swapaxes(0, 1),
+          Cf.swapaxes(0, 1), dA.swapaxes(0, 1))
+    final_state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, P)[:, :S_in]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, dt, A, B_mat, C_mat, state):
+    """One-token recurrent update.  x: (B,1,H,P); state: (B,H,P,N)."""
+    xf = x.astype(jnp.float32)[:, 0]                     # (B,H,P)
+    dtf = dt.astype(jnp.float32)[:, 0]                   # (B,H)
+    rep = xf.shape[1] // B_mat.shape[2]
+    Bf = jnp.repeat(B_mat.astype(jnp.float32), rep, axis=2)[:, 0]  # (B,H,N)
+    Cf = jnp.repeat(C_mat.astype(jnp.float32), rep, axis=2)[:, 0]
+    dA = jnp.exp(dtf * (-jnp.exp(A.astype(jnp.float32)))[None, :])  # (B,H)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhpn", Bf, dtf, xf)
+    y = jnp.einsum("bhn,bhpn->bhp", Cf, new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int) -> dict:
+    s, d_in, nheads, gn = _dims(cfg)
+    dt = L.dtype_of(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_dim - 1, d_in), dt),
+        "conv_B": jnp.zeros((batch, s.conv_dim - 1, gn), dt),
+        "conv_C": jnp.zeros((batch, s.conv_dim - 1, gn), dt),
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.state_dim),
+                           jnp.float32),
+    }
+
+
+def ssd_block(params, x, cfg: ModelConfig,
+              cache: Optional[dict] = None,
+              valid: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d) -> (B,S,d).  cache None => training/prefill-from-zero.
+
+    ``valid`` (B,S) bool: padding tokens (ragged chunk tails) get dt=0 —
+    zero state contribution *and* unit decay, so they are exactly inert."""
+    s, d_in, nheads, gn = _dims(cfg)
+    B, S, d = x.shape
+    dt_ = x.dtype
+    z = x @ params["w_z"].astype(dt_)
+    xs_ = x @ params["w_x"].astype(dt_)
+    B_in = x @ params["w_B"].astype(dt_)
+    C_in = x @ params["w_C"].astype(dt_)
+    dt_raw = x @ params["w_dt"].astype(dt_)
+
+    cx = cache["conv_x"] if cache is not None else None
+    cB = cache["conv_B"] if cache is not None else None
+    cC = cache["conv_C"] if cache is not None else None
+    vn = valid.sum(-1).astype(jnp.int32) if valid is not None else None
+    xs_, new_cx = _causal_conv(xs_, params["conv_x_w"], params["conv_x_b"],
+                               cx, valid_n=vn)
+    B_in, new_cB = _causal_conv(B_in, params["conv_B_w"], params["conv_B_b"],
+                                cB, valid_n=vn)
+    C_in, new_cC = _causal_conv(C_in, params["conv_C_w"], params["conv_C_b"],
+                                cC, valid_n=vn)
+
+    xs = xs_.reshape(B, S, nheads, s.head_dim)
+    B_mat = B_in.reshape(B, S, s.n_groups, s.state_dim)
+    C_mat = C_in.reshape(B, S, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    if valid is not None:
+        dt = dt * valid[..., None].astype(jnp.float32)
+
+    if cache is None:
+        y, _ = ssd_chunked(xs, dt, params["A_log"], B_mat, C_mat, s.chunk_size)
+        new_cache = None
+    elif S == 1:
+        y, new_state = ssd_decode_step(xs, dt, params["A_log"], B_mat, C_mat,
+                                       cache["state"])
+        new_cache = {"conv_x": new_cx, "conv_B": new_cB, "conv_C": new_cC,
+                     "state": new_state}
+    else:  # chunked prefill continuing from a carried state
+        y, new_state = ssd_chunked(xs, dt, params["A_log"], B_mat, C_mat,
+                                   s.chunk_size, init_state=cache["state"])
+        new_cache = {"conv_x": new_cx, "conv_B": new_cB, "conv_C": new_cC,
+                     "state": new_state}
+
+    y = y + xs * params["D"][None, None, :, None].astype(dt_)
+    y = y.reshape(B, S, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(dt_), new_cache

@@ -1,0 +1,6 @@
+"""Multi-tenant serving engine: OSMOSIS scheduling over continuous batching."""
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request, RequestStatus
+from repro.serving.sampler import sample
+
+__all__ = ["Engine", "EngineConfig", "Request", "RequestStatus", "sample"]

@@ -1,0 +1,364 @@
+"""OSMOSIS multi-tenant serving engine (the paper's §5 on a TPU pod).
+
+Control plane (host, this module)      | Data plane (jitted XLA programs)
+---------------------------------------+----------------------------------
+ECTX admission + static KV quotas (R3) | batched chunked prefill
+WLBVT slot scheduler          (R1, R4) | batched decode (1 token/step)
+DWRR prefill-token arbitration    (R2) | slot-cache reset
+watchdog budgets + EQ events      (R5) |
+priority SLO knobs                (R6) |
+
+Mapping (DESIGN.md §2): packet = request chunk; PU = batch slot; kernel =
+the model's execution for that chunk (cost unknown a priori — prompt and
+output lengths differ per tenant, exactly the paper's unpredictable-kernel
+problem); DMA fragmentation = chunked prefill; egress WRR = per-step
+prefill token budget.  Scheduling state is the *same* WLBVT/DWRR code the
+PsPIN simulator uses (core/wlbvt.py) — the contribution is shared, not
+re-implemented.
+
+Run-to-completion: one scheduled chunk = one XLA program invocation; the
+engine never preempts inside a step (paper §5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import wlbvt as W
+from repro.core.accounting import TimeAveragedJain, jain_fairness
+from repro.core.admission import AdmissionError
+from repro.core.events import Event, EventKind, EventQueue
+from repro.core.slo import ECTX, SLOPolicy
+from repro.serving.kv_cache import SlotManager
+from repro.serving.request import Request, RequestStatus
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8                # "PUs": concurrent batch slots
+    max_len: int = 512                # KV tokens per slot
+    prefill_chunk: int = 64           # fragmentation grain (R2)
+    prefill_slots_per_step: int = 2   # per-step prefill budget (PPB analog)
+    scheduler: str = "wlbvt"          # "wlbvt" | "rr" (baseline)
+    arbiter: str = "dwrr"             # "dwrr" | "fifo" (baseline)
+    max_tenants: int = 16
+    kv_overcommit: float = 1.0        # R3: 1.0 = strict static reservation
+
+
+class NullExecutor:
+    """Scheduling-only backend (no model): deterministic fake tokens."""
+
+    def __init__(self, cfg: EngineConfig):
+        self.B = cfg.max_slots
+
+    def prefill(self, tokens, lengths, valid_n):
+        return np.zeros(self.B, np.int32)
+
+    def decode(self, tokens, lengths, active):
+        return (tokens + 1).astype(np.int32) % 97
+
+    def reset(self, keep):
+        pass
+
+
+class ModelExecutor:
+    """Real data plane: jitted prefill/decode/reset over a Model."""
+
+    def __init__(self, model_cfg: ModelConfig, ecfg: EngineConfig,
+                 params=None, mesh=None, rng_seed: int = 0,
+                 temperature: float = 0.0):
+        import jax
+        import jax.numpy as jnp
+        from repro.serving.serve_step import build_serve_fns
+        self.jnp = jnp
+        self.fns = build_serve_fns(
+            model_cfg, mesh, batch=ecfg.max_slots, max_len=ecfg.max_len,
+            prefill_chunk=ecfg.prefill_chunk, temperature=temperature)
+        self.params = (params if params is not None
+                       else self.fns.init_params(jax.random.PRNGKey(rng_seed)))
+        self.cache = self.fns.init_cache()
+
+    def prefill(self, tokens, lengths, valid_n):
+        nxt, _, self.cache = self.fns.prefill_chunk(
+            self.params, self.cache, self.jnp.asarray(tokens),
+            self.jnp.asarray(lengths), self.jnp.asarray(valid_n))
+        return np.asarray(nxt)
+
+    def decode(self, tokens, lengths, active):
+        nxt, self.cache = self.fns.decode(
+            self.params, self.cache, self.jnp.asarray(tokens),
+            self.jnp.asarray(lengths), self.jnp.asarray(active))
+        return np.asarray(nxt)
+
+    def reset(self, keep):
+        self.cache = self.fns.reset_slots(self.cache,
+                                          self.jnp.asarray(keep))
+
+
+class Engine:
+    def __init__(self, ecfg: EngineConfig, executor=None):
+        self.cfg = ecfg
+        self.exe = executor or NullExecutor(ecfg)
+        T = ecfg.max_tenants
+        self.slots = SlotManager(ecfg.max_slots, ecfg.max_len,
+                                 overcommit=ecfg.kv_overcommit)
+        self.ectx: Dict[int, ECTX] = {}
+        self.queues: Dict[int, deque] = {}
+        self.eq: Dict[int, EventQueue] = {}
+        self.st = W.WLBVTState.create(np.ones(T))
+        self._installed = np.zeros(T, bool)
+        self.rr_ptr = 0
+        self.dwrr = W.DWRRState.create(np.ones(T))
+        # slot state (numpy mirrors of device state)
+        S = ecfg.max_slots
+        self.slot_req: List[Optional[Request]] = [None] * S
+        self.lengths = np.zeros(S, np.int32)
+        self.last_tok = np.zeros(S, np.int32)
+        self.step_count = 0
+        self._next_rid = 0
+        self._control: deque = deque()
+        self.fairness = TimeAveragedJain()
+        self.done: List[Request] = []
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+
+    # ------------------------------------------------------------------
+    # control plane (R5: processed before data-path work each step)
+    # ------------------------------------------------------------------
+    def create_ectx(self, tenant_id: int, slo: SLOPolicy,
+                    name: str = "") -> ECTX:
+        """Admission: static KV segment + FMQ install.  Raises
+        AdmissionError when the quota does not fit (R3)."""
+        if tenant_id in self.ectx:
+            raise AdmissionError(f"tenant {tenant_id} already admitted")
+        if tenant_id >= self.cfg.max_tenants:
+            raise AdmissionError("FMQ table full")
+        self.slots.admit(tenant_id, slo.kv_quota_tokens)
+        e = ECTX(tenant_id=tenant_id, name=name or f"tenant{tenant_id}",
+                 slo=slo)
+        e.fmq_index = tenant_id
+        self.ectx[tenant_id] = e
+        self.queues[tenant_id] = deque()
+        self.eq[tenant_id] = EventQueue()
+        self.st.prio[tenant_id] = slo.priority
+        self.dwrr.weights[tenant_id] = slo.dma_priority
+        self._installed[tenant_id] = True
+        self.eq[tenant_id].push(Event(tenant_id, EventKind.ADMITTED,
+                                      self.step_count))
+        return e
+
+    def destroy_ectx(self, tenant_id: int) -> None:
+        for s, r in enumerate(self.slot_req):
+            if r is not None and r.tenant_id == tenant_id:
+                self._finish(s, RequestStatus.KILLED)
+        self.slots.evict(tenant_id)
+        self.ectx.pop(tenant_id, None)
+        self.queues.pop(tenant_id, None)
+        self._installed[tenant_id] = False
+        self.st.queue_len[tenant_id] = 0
+
+    def submit(self, req: Request) -> Request:
+        if req.tenant_id not in self.ectx:
+            req.status = RequestStatus.REJECTED
+            return req
+        limit = self.ectx[req.tenant_id].slo.kernel_cycle_limit
+        if req.prompt_len + req.max_new_tokens > self.cfg.max_len:
+            req.status = RequestStatus.REJECTED
+            self.eq[req.tenant_id].push(Event(
+                req.tenant_id, EventKind.MEMORY_FAULT, self.step_count,
+                "request exceeds slot KV capacity"))
+            return req
+        req.rid = self._next_rid
+        self._next_rid += 1
+        req.arrival_step = self.step_count
+        self.queues[req.tenant_id].append(req)
+        self.st.queue_len[req.tenant_id] += 1
+        return req
+
+    def poll_events(self, tenant_id: int) -> List[Event]:
+        return self.eq[tenant_id].drain()
+
+    # ------------------------------------------------------------------
+    # data plane step
+    # ------------------------------------------------------------------
+    def _select(self) -> int:
+        if self.cfg.scheduler == "rr":
+            for k in range(self.cfg.max_tenants):
+                i = (self.rr_ptr + k) % self.cfg.max_tenants
+                if self.st.queue_len[i] > 0 and self.slots.can_take(i):
+                    self.rr_ptr = (i + 1) % self.cfg.max_tenants
+                    return i
+            return -1
+        # WLBVT with the KV-quota cap folded into eligibility (R1 + R3)
+        limit = W.pu_limit(self.st, self.cfg.max_slots)
+        tput = self.st.tput()
+        best, best_m = -1, np.inf
+        for i in range(self.cfg.max_tenants):
+            if self.st.queue_len[i] <= 0:
+                continue
+            if self.st.cur_occup[i] >= limit[i] or not self.slots.can_take(i):
+                continue
+            m = tput[i] / self.st.prio[i]
+            if m < best_m:
+                best, best_m = i, m
+        return best
+
+    def _assign_slots(self) -> None:
+        while self.slots.free_slots().size > 0:
+            t = self._select()
+            if t < 0:
+                return
+            req = self.queues[t].popleft()
+            self.st.queue_len[t] -= 1
+            s = self.slots.take(t)
+            self.st.cur_occup[t] += 1
+            req.slot = s
+            req.status = RequestStatus.PREFILL
+            req.start_step = self.step_count
+            self.slot_req[s] = req
+            self.lengths[s] = 0
+            # invalidate any stale cache rows for this slot (R3 isolation)
+            keep = np.ones(self.cfg.max_slots, bool)
+            keep[s] = False
+            self.exe.reset(keep)
+
+    def _finish(self, slot: int, status: RequestStatus) -> None:
+        req = self.slot_req[slot]
+        req.status = status
+        req.finish_step = self.step_count
+        t = req.tenant_id
+        self.st.cur_occup[t] -= 1
+        self.slots.release(slot)
+        self.slot_req[slot] = None
+        self.done.append(req)
+        if status == RequestStatus.KILLED:
+            self.eq[t].push(Event(t, EventKind.REQUEST_KILLED,
+                                  self.step_count, f"rid={req.rid}"))
+
+    def _prefill_phase(self) -> None:
+        """Chunked prefill with DWRR tenant arbitration (R2): at most
+        ``prefill_slots_per_step`` slots advance one fragment per step."""
+        C = self.cfg.prefill_chunk
+        pending_slots: Dict[int, List[int]] = {}
+        for s, r in enumerate(self.slot_req):
+            if r is not None and r.status == RequestStatus.PREFILL:
+                pending_slots.setdefault(r.tenant_id, []).append(s)
+        if not pending_slots:
+            return
+        chosen: List[int] = []
+        if self.cfg.arbiter == "fifo":
+            # no-QoS baseline: oldest requests first regardless of tenant
+            order = sorted(
+                (s for ss in pending_slots.values() for s in ss),
+                key=lambda s: self.slot_req[s].rid)
+            chosen = order[: self.cfg.prefill_slots_per_step]
+        else:
+            T = self.cfg.max_tenants
+            for _ in range(self.cfg.prefill_slots_per_step):
+                pend = np.array([bool(pending_slots.get(i))
+                                 for i in range(T)])
+                if not pend.any():
+                    break
+                head = np.full(T, float(C))
+                i = W.dwrr_select(self.dwrr, head, pend, quantum=float(C))
+                if i < 0:
+                    break
+                chosen.append(pending_slots[i].pop(0))
+
+        if not chosen:
+            return
+        B = self.cfg.max_slots
+        tokens = np.zeros((B, C), np.int32)
+        valid_n = np.zeros(B, np.int32)
+        for s in chosen:
+            r = self.slot_req[s]
+            n = min(C, r.prompt_len - r.prefill_done)
+            tokens[s, :n] = r.prompt[r.prefill_done:r.prefill_done + n]
+            valid_n[s] = n
+        nxt = self.exe.prefill(tokens, self.lengths.copy(), valid_n)
+        self.prefill_chunks += 1
+        for s in chosen:
+            r = self.slot_req[s]
+            n = int(valid_n[s])
+            r.prefill_done += n
+            self.lengths[s] += n
+            r.chunk_steps.append(self.step_count)
+            if r.prefill_done >= r.prompt_len:
+                r.status = RequestStatus.DECODE
+                r.generated.append(int(nxt[s]))
+                self.last_tok[s] = nxt[s]
+
+    def _decode_phase(self) -> None:
+        active = np.array([
+            r is not None and r.status == RequestStatus.DECODE
+            for r in self.slot_req])
+        if not active.any():
+            return
+        nxt = self.exe.decode(self.last_tok.copy(), self.lengths.copy(),
+                              active)
+        self.decode_steps += 1
+        for s in np.flatnonzero(active):
+            r = self.slot_req[s]
+            self.lengths[s] += 1
+            r.generated.append(int(nxt[s]))
+            self.last_tok[s] = nxt[s]
+            limit = self.ectx[r.tenant_id].slo.kernel_cycle_limit
+            if limit and r.total_tokens > limit:
+                self._finish(s, RequestStatus.KILLED)
+            elif len(r.generated) >= r.max_new_tokens:
+                self._finish(s, RequestStatus.DONE)
+
+    def step(self) -> None:
+        # R5: control traffic first
+        while self._control:
+            self._control.popleft()()
+        self._assign_slots()
+        self._prefill_phase()
+        self._decode_phase()
+        # WLBVT accounting + fairness (per engine step = one "cycle")
+        W.advance(self.st, 1.0)
+        act = self.st.active & self._installed
+        if act.sum() >= 2:
+            self.fairness.update(
+                self.st.cur_occup[act], 1.0,
+                weights=self.st.prio[act])
+        self.step_count += 1
+
+    def run(self, steps: int) -> None:
+        for _ in range(steps):
+            self.step()
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            busy = any(r is not None for r in self.slot_req) or \
+                any(len(q) for q in self.queues.values())
+            if not busy:
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")  # pragma: no cover
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        per_tenant: Dict[int, Dict[str, float]] = {}
+        for r in self.done:
+            d = per_tenant.setdefault(r.tenant_id, {
+                "done": 0, "killed": 0, "fct_sum": 0.0, "tokens": 0})
+            if r.status == RequestStatus.DONE:
+                d["done"] += 1
+                d["fct_sum"] += r.fct
+                d["tokens"] += r.total_tokens
+            else:
+                d["killed"] += 1
+        for t, d in per_tenant.items():
+            d["mean_fct"] = d["fct_sum"] / max(d["done"], 1)
+        return {
+            "steps": self.step_count,
+            "jain_timeavg": self.fairness.value,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "tenants": per_tenant,
+        }

@@ -1,0 +1,24 @@
+"""Token sampling: greedy / temperature / top-k, batched and jittable."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, *, temperature: float = 0.0,
+           top_k: int = 0, rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """logits: (B, V) fp32 -> (B,) int32.
+
+    temperature == 0 => greedy.  top_k > 0 restricts to the k best before
+    the categorical draw.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    assert rng is not None, "temperature sampling needs an rng"
+    return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)

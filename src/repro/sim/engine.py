@@ -1,0 +1,410 @@
+"""Discrete-event, cycle-level simulator of the OSMOSIS/PsPIN datapath.
+
+Models (paper §6-§7 setup): 4 clusters × 8 PUs @ 1 GHz, 400 Gbit/s
+ingress/egress, 512 Gbit/s shared AXI for DMA + egress-buffer writes,
+per-FMQ FIFOs, WLBVT (or RR) PU scheduling, DWRR IO arbitration with
+off/software/hardware transfer fragmentation, per-kernel watchdog budgets,
+and an EQ control path served at highest IO priority.
+
+Event timing is exact: WLBVT's per-cycle ``update_tput`` is integrated
+lazily over piecewise-constant occupancy intervals (numerically identical
+to the per-cycle update).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.osmosis_pspin import PSPIN, PsPINConfig
+from repro.core import (ECTX, EventKind, Event, EventQueue, FMQ,
+                        FragmentationPolicy, MatchingEngine,
+                        PacketDescriptor, fragment_transfer)
+from repro.core.accounting import jain_fairness
+from repro.core import wlbvt as W
+from repro.sim.traffic import TracePacket
+from repro.sim.workloads import WorkloadModel
+
+
+@dataclasses.dataclass
+class TenantStats:
+    completed: int = 0
+    killed: int = 0
+    drops: int = 0
+    served_payload_bytes: float = 0.0
+    io_bytes_done: float = 0.0
+    kernel_times: List[float] = dataclasses.field(default_factory=list)
+    first_arrival: float = float("inf")
+    last_completion: float = 0.0
+
+    @property
+    def fct(self) -> float:
+        if self.last_completion <= 0:
+            return 0.0
+        return self.last_completion - min(self.first_arrival,
+                                          self.last_completion)
+
+
+@dataclasses.dataclass
+class SimResult:
+    time: float
+    stats: Dict[int, TenantStats]
+    jain_pu_timeavg: float
+    jain_io_timeavg: float
+    timeline: Optional[dict] = None
+    events: List[Event] = dataclasses.field(default_factory=list)
+
+    def throughput_gbps(self, tenant: int) -> float:
+        st = self.stats[tenant]
+        return st.served_payload_bytes * 8.0 / max(self.time, 1e-9)
+
+    def p50(self, tenant: int) -> float:
+        ts = self.stats[tenant].kernel_times
+        return float(np.percentile(ts, 50)) if ts else 0.0
+
+    def p99(self, tenant: int) -> float:
+        ts = self.stats[tenant].kernel_times
+        return float(np.percentile(ts, 99)) if ts else 0.0
+
+
+class Simulator:
+    def __init__(self, tenants: List[ECTX], *,
+                 scheduler: str = "wlbvt",
+                 frag: Optional[FragmentationPolicy] = None,
+                 arb: str = "dwrr",
+                 hw: PsPINConfig = PSPIN,
+                 fifo_capacity: int = 4096,
+                 io_demand_weights=None,
+                 record_timeline: bool = False):
+        self.hw = hw
+        self.sched_kind = scheduler
+        self.frag = frag or FragmentationPolicy(mode="off")
+        self.record_timeline = record_timeline
+
+        self.fmqs: List[FMQ] = []
+        self.matching = MatchingEngine()
+        for i, e in enumerate(tenants):
+            e.fmq_index = i
+            self.fmqs.append(FMQ(index=i, ectx=e, capacity=fifo_capacity))
+        prios = [e.slo.priority for e in tenants]
+        self.st = W.WLBVTState.create(prios)
+        self.rr_ptr = 0
+
+        self.free_pus = hw.num_pus
+        self.eq = EventQueue()
+
+        # AXI: per-tenant fragment queues; entries are
+        # (Fragment, kind, done_cb|None).  arb: "dwrr" (OSMOSIS) or "fifo"
+        # (reference PsPIN — a blocking interconnect with no QoS: grants in
+        # strict arrival order => HoL blocking, paper Fig. 5).
+        T = len(tenants)
+        self.arb = arb
+        self.axi_q: List[deque] = [deque() for _ in range(T)]
+        self.axi_fifo: deque = deque()     # arrival order (fifo mode)
+        self.axi_ctrl: deque = deque()     # EQ/control traffic, R5 priority
+        self.axi_busy = False
+        self.dwrr = W.DWRRState.create(
+            [e.slo.dma_priority for e in tenants])
+        # egress link: same arbitration discipline as the DMA engine
+        self.egress_q: List[deque] = [deque() for _ in range(T)]
+        self.egress_fifo: deque = deque()
+        self.egress_busy = False
+        self.egress_dwrr = W.DWRRState.create(
+            [e.slo.egress_priority for e in tenants])
+
+        self._events: list = []
+        self._seq = 0
+        self.now = 0.0
+        self._last_adv = 0.0
+        self.stats: Dict[int, TenantStats] = {i: TenantStats()
+                                              for i in range(T)}
+        # fairness integrals; IO fairness uses windowed byte counts so the
+        # metric reflects per-window shares, not event granularity
+        self._jain_pu_acc = 0.0
+        self._jain_pu_t = 0.0
+        self._jain_io_acc = 0.0
+        self._jain_io_t = 0.0
+        self.io_window_ns = 2000.0
+        self.io_demand_weights = (np.ones(T) if io_demand_weights is None
+                                  else np.asarray(io_demand_weights, float))
+        self._win_start = 0.0
+        self._win_io = np.zeros(T)
+        self._win_act = np.zeros(T, bool)
+        self._io_bytes_cum = np.zeros(T)
+        self._tl: Dict[str, list] = {"t": [], "occup": [], "io_win": [],
+                                     "qlen": []}
+
+    # -- event machinery ---------------------------------------------------
+    def _post(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._events, (t, self._seq, fn))
+        self._seq += 1
+
+    def _advance_to(self, t: float) -> None:
+        dt = t - self._last_adv
+        if dt <= 0:
+            return
+        # WLBVT bookkeeping (lazy per-cycle integration)
+        W.advance(self.st, dt)
+        # fairness integrals over the interval
+        occ = self.st.cur_occup.astype(float)
+        act = self.st.active
+        if act.sum() >= 2:
+            prio = self.st.prio
+            self._jain_pu_acc += jain_fairness((occ / prio)[act]) * dt
+            self._jain_pu_t += dt
+        self._win_act |= act
+        while t - self._win_start >= self.io_window_ns:
+            wa = self._win_act
+            if wa.sum() >= 2 and self._win_io.sum() > 0:
+                dma_w = np.array([f.ectx.slo.dma_priority
+                                  for f in self.fmqs])
+                w = dma_w * self.io_demand_weights
+                self._jain_io_acc += jain_fairness(
+                    (self._win_io / w)[wa]) * self.io_window_ns
+                self._jain_io_t += self.io_window_ns
+            if self.record_timeline:
+                self._tl["t"].append(self._win_start)
+                self._tl["occup"].append(occ.copy())
+                self._tl["io_win"].append(self._win_io.copy())
+                self._tl["qlen"].append(self.st.queue_len.copy())
+            self._win_io[:] = 0.0
+            self._win_act = self.st.active.copy()
+            self._win_start += self.io_window_ns
+        self._last_adv = t
+
+    # -- ingress -------------------------------------------------------------
+    def _arrival(self, pkt: TracePacket) -> None:
+        i = pkt.tenant  # tenant id == fmq index (matching by construction)
+        fmq = self.fmqs[i]
+        st = self.stats[i]
+        st.first_arrival = min(st.first_arrival, self.now)
+        ok = fmq.push(PacketDescriptor(i, pkt.size, self.now))
+        if not ok:
+            st.drops += 1
+            self.eq.push(Event(i, EventKind.QUEUE_OVERFLOW, self.now))
+            return
+        self.st.queue_len[i] += 1
+        self._dispatch()
+
+    # -- PU scheduling ---------------------------------------------------------
+    def _select(self) -> int:
+        if self.sched_kind == "rr":
+            idx, self.rr_ptr = W.select_rr(self.rr_ptr, self.st.queue_len)
+            return idx
+        return W.select(self.st, self.hw.num_pus)
+
+    def _dispatch(self) -> None:
+        while self.free_pus > 0:
+            idx = self._select()
+            if idx < 0:
+                return
+            fmq = self.fmqs[idx]
+            pkt = fmq.pop()
+            assert pkt is not None
+            self.st.queue_len[idx] -= 1
+            self.st.cur_occup[idx] += 1
+            self.free_pus -= 1
+            self._start_kernel(idx, pkt)
+
+    def _start_kernel(self, idx: int, pkt: PacketDescriptor) -> None:
+        fmq = self.fmqs[idx]
+        wl: WorkloadModel = fmq.ectx.kernel
+        payload = max(0, pkt.size_bytes - self.hw.header_bytes)
+        t0 = self.now + self.hw.dma_setup_cycles   # L2->L1 DMA, hides sched
+        comp = wl.compute_cycles(payload)
+        limit = fmq.ectx.slo.kernel_cycle_limit
+        killed = bool(limit and comp > limit)
+        if killed:
+            comp = float(limit)
+        io_bytes = 0 if killed else wl.io_bytes(payload)
+
+        if io_bytes and self.frag.mode == "software":
+            nfrag = -(-io_bytes // self.frag.fragment_bytes)
+            comp += self.frag.sw_overhead_cycles * nfrag
+
+        t_comp = t0 + comp
+
+        def fin(t_done: float, was_killed=killed):
+            self._finish_kernel(idx, pkt, t0, t_done, was_killed, payload)
+
+        if io_bytes:
+            self._post(t_comp, lambda: self._submit_transfer(
+                idx, io_bytes, wl.io_kind,
+                lambda t_done: fin(t_done)))
+        else:
+            self._post(t_comp, lambda: fin(self.now))
+
+    def _finish_kernel(self, idx, pkt, t_start, t_done, killed, payload):
+        st = self.stats[idx]
+        self.st.cur_occup[idx] -= 1
+        self.free_pus += 1
+        if killed:
+            st.killed += 1
+            self.eq.push(Event(idx, EventKind.CYCLE_BUDGET_EXCEEDED,
+                               self.now))
+        else:
+            st.completed += 1
+            st.served_payload_bytes += payload
+        st.kernel_times.append(self.now - (t_start - self.hw.dma_setup_cycles))
+        st.last_completion = self.now
+        self.fmqs[idx].completed += 1
+        self._dispatch()
+
+    # -- AXI / DMA / egress ------------------------------------------------------
+    def _submit_transfer(self, idx: int, nbytes: int, kind: str,
+                         cb: Callable[[float], None]) -> None:
+        frags = fragment_transfer(self.frag, idx, transfer_id=self._seq,
+                                  nbytes=nbytes)
+        if self.frag.mode == "software":
+            # kernel issues fragments one by one (blocking wrapper)
+            def issue(i: int):
+                f = frags[i]
+                if i + 1 < len(frags):
+                    nxt = lambda _t: issue(i + 1)
+                else:
+                    nxt = cb
+                self._enqueue_axi(idx, f, kind, nxt)
+            issue(0)
+        else:
+            for f in frags:
+                self._enqueue_axi(idx, f, kind, cb if f.last else None)
+
+    def _enqueue_axi(self, idx, frag, kind, cb) -> None:
+        if self.arb == "fifo":
+            self.axi_fifo.append((idx, frag, kind, cb))
+        else:
+            self.axi_q[idx].append((frag, kind, cb))
+        self._kick_axi()
+
+    def submit_control(self, nbytes: int = 64,
+                       cb: Optional[Callable] = None) -> None:
+        """EQ/control message: highest IO priority (R5)."""
+        self.axi_ctrl.append((nbytes, cb))
+        self._kick_axi()
+
+    def _axi_pick(self):
+        """Next (tenant, frag, kind, cb) per arbitration policy, or None."""
+        if self.arb == "fifo":
+            return self.axi_fifo.popleft() if self.axi_fifo else None
+        pending = np.array([len(q) > 0 for q in self.axi_q])
+        if not pending.any():
+            return None
+        head = np.array([q[0][0].nbytes if q else 0 for q in self.axi_q],
+                        float)
+        i = W.dwrr_select(self.dwrr, head, pending,
+                          quantum=float(self.frag.fragment_bytes))
+        if i < 0:
+            return None
+        frag, kind, cb = self.axi_q[i].popleft()
+        return i, frag, kind, cb
+
+    def _kick_axi(self) -> None:
+        if self.axi_busy:
+            return
+        ns_per_b = self.hw.wire_ns_per_byte(self.hw.axi_gbps)
+        if self.axi_ctrl:
+            nbytes, cb = self.axi_ctrl.popleft()
+            self.axi_busy = True
+
+            def done_ctrl():
+                self.axi_busy = False
+                if cb:
+                    cb(self.now)
+                self._kick_axi()
+            self._post(self.now + nbytes * ns_per_b, done_ctrl)
+            return
+        picked = self._axi_pick()
+        if picked is None:
+            return
+        i, frag, kind, cb = picked
+        overhead = (self.frag.hw_overhead_cycles
+                    if self.frag.mode == "hardware" else 0)
+        dur = frag.nbytes * ns_per_b + overhead
+        self.axi_busy = True
+
+        def done():
+            self.axi_busy = False
+            if kind == "egress":
+                self._egress_enqueue(i, frag, cb)
+            else:
+                self._io_bytes_cum[i] += frag.nbytes
+                self._win_io[i] += frag.nbytes
+                self.stats[i].io_bytes_done += frag.nbytes
+                if cb is not None:
+                    cb(self.now)
+            self._kick_axi()
+
+        self._post(self.now + dur, done)
+
+    def _egress_enqueue(self, idx, frag, cb) -> None:
+        if self.arb == "fifo":
+            self.egress_fifo.append((idx, frag, cb))
+        else:
+            self.egress_q[idx].append((frag, cb))
+        self._kick_egress()
+
+    def _egress_pick(self):
+        if self.arb == "fifo":
+            return self.egress_fifo.popleft() if self.egress_fifo else None
+        pending = np.array([len(q) > 0 for q in self.egress_q])
+        if not pending.any():
+            return None
+        head = np.array([q[0][0].nbytes if q else 0 for q in self.egress_q],
+                        float)
+        i = W.dwrr_select(self.egress_dwrr, head, pending,
+                          quantum=float(self.frag.fragment_bytes))
+        if i < 0:
+            return None
+        frag, cb = self.egress_q[i].popleft()
+        return i, frag, cb
+
+    def _kick_egress(self) -> None:
+        if self.egress_busy:
+            return
+        picked = self._egress_pick()
+        if picked is None:
+            return
+        i, frag, cb = picked
+        dur = frag.nbytes * self.hw.wire_ns_per_byte(self.hw.egress_gbps)
+        self.egress_busy = True
+
+        def done():
+            self.egress_busy = False
+            self._io_bytes_cum[i] += frag.nbytes
+            self._win_io[i] += frag.nbytes
+            self.stats[i].io_bytes_done += frag.nbytes
+            if cb is not None:
+                cb(self.now)
+            self._kick_egress()
+
+        self._post(self.now + dur, done)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, trace: List[TracePacket],
+            horizon: Optional[float] = None) -> SimResult:
+        for pkt in trace:
+            self._post(pkt.time, (lambda p: (lambda: self._arrival(p)))(pkt))
+        while self._events:
+            t = self._events[0][0]
+            if horizon is not None and t > horizon:
+                break            # leave the event queued for a later run()
+            t, _, fn = heapq.heappop(self._events)
+            self._advance_to(t)
+            self.now = t
+            fn()
+        tl = None
+        if self.record_timeline:
+            tl = {k: np.array(v) for k, v in self._tl.items()}
+        return SimResult(
+            time=self.now,
+            stats=self.stats,
+            jain_pu_timeavg=(self._jain_pu_acc / self._jain_pu_t
+                             if self._jain_pu_t else 1.0),
+            jain_io_timeavg=(self._jain_io_acc / self._jain_io_t
+                             if self._jain_io_t else 1.0),
+            timeline=tl,
+            events=self.eq.drain(),
+        )

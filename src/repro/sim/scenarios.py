@@ -1,0 +1,191 @@
+"""Scenario builders for the paper's experiments (§3, §7.3, §7.4)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.osmosis_pspin import PSPIN
+from repro.core import ECTX, FragmentationPolicy, SLOPolicy
+from repro.sim.engine import SimResult, Simulator
+from repro.sim.traffic import equal_share_traces, make_trace, merge_traces
+from repro.sim.workloads import (WORKLOADS, WorkloadModel, ppb,
+                                 spin_workload)
+
+
+def make_tenants(kernels: List[WorkloadModel],
+                 priorities: Optional[List[float]] = None,
+                 cycle_limits: Optional[List[int]] = None) -> List[ECTX]:
+    out = []
+    for i, k in enumerate(kernels):
+        slo = SLOPolicy(
+            priority=(priorities[i] if priorities else 1.0),
+            kernel_cycle_limit=(cycle_limits[i] if cycle_limits else 0))
+        out.append(ECTX(tenant_id=i, name=k.name, slo=slo, kernel=k))
+    return out
+
+
+def run_congestor_victim_compute(scheduler: str, *, cpb_victim: float = 0.6,
+                                 cpb_ratio: float = 2.0,
+                                 duration_us: float = 300.0,
+                                 pkt_size: int = 512, seed: int = 0
+                                 ) -> SimResult:
+    """Paper Figs. 4 & 9: two compute-bound spin tenants, the Congestor with
+    `cpb_ratio`x the compute cost per byte."""
+    victim = spin_workload("victim", cpb_victim)
+    congestor = spin_workload("congestor", cpb_victim * cpb_ratio)
+    tenants = make_tenants([congestor, victim])
+    trace = equal_share_traces(2, sizes=[pkt_size, pkt_size],
+                               duration_ns=duration_us * 1e3, seed=seed)
+    sim = Simulator(tenants, scheduler=scheduler, record_timeline=True)
+    return sim.run(trace)
+
+
+def run_hol_blocking(frag: FragmentationPolicy, *, congestor_size: int = 4096,
+                     victim_size: int = 64, duration_us: float = 150.0,
+                     scheduler: str = "wlbvt", arb: str = "dwrr",
+                     seed: int = 0) -> SimResult:
+    """Paper Figs. 5 & 10: storage-read pattern — small request packets
+    trigger large blocking egress transfers (paper §5.1 step 5: "kernels
+    can pipeline large storage reads").  The congestor's PUs hold up to
+    pu_limit concurrent `congestor_size` transfers, so under FIFO (no-QoS)
+    arbitration the victim's 64B transfer waits behind the whole in-flight
+    burst; DWRR + fragmentation bounds that wait to ~one fragment."""
+    victim = WorkloadModel("victim_io", 40, 0.02, io_kind="egress",
+                           io_fixed_bytes=victim_size)
+    congestor = WorkloadModel("congestor_io", 40, 0.02, io_kind="egress",
+                              io_fixed_bytes=congestor_size)
+    tenants = make_tenants([congestor, victim])
+    trace = merge_traces(
+        # congestor: enough 512B requests to keep its PU share saturated
+        make_trace(0, size=512, share=0.50, seed=seed,
+                   duration_ns=duration_us * 1e3),
+        # victim: latency probe at modest rate
+        make_trace(1, size=64, share=0.02, seed=seed + 1,
+                   duration_ns=duration_us * 1e3))
+    sim = Simulator(tenants, scheduler=scheduler, frag=frag, arb=arb)
+    return sim.run(trace)
+
+
+def run_standalone(workload_name: str, *, pkt_size: int,
+                   duration_us: float = 100.0,
+                   osmosis: bool = True, seed: int = 0) -> SimResult:
+    """Paper Fig. 11: single tenant; OSMOSIS (WLBVT + hw frag) vs the
+    reference PsPIN (RR, no fragmentation)."""
+    wl = WORKLOADS[workload_name]
+    tenants = make_tenants([wl])
+    trace = make_trace(0, size=pkt_size, link_gbps=PSPIN.ingress_gbps,
+                       duration_ns=duration_us * 1e3, seed=seed)
+    frag = (FragmentationPolicy(mode="hardware", fragment_bytes=512)
+            if osmosis else FragmentationPolicy(mode="off"))
+    sim = Simulator(tenants, scheduler="wlbvt" if osmosis else "rr",
+                    frag=frag, arb="dwrr" if osmosis else "fifo")
+    return sim.run(trace)
+
+
+def _pu_share(wl: WorkloadModel, size: int, target_pus: float) -> float:
+    """Ingress link share at which tenant demands `target_pus` PU-cycles/ns."""
+    payload = max(1, size - PSPIN.header_bytes)
+    cyc = wl.compute_cycles(payload)
+    bytes_per_ns_full = PSPIN.ingress_gbps / 8.0
+    return target_pus * size / (bytes_per_ns_full * cyc)
+
+
+def _io_share(wl: WorkloadModel, size: int, target_bytes_per_ns: float) -> float:
+    payload = max(1, size - PSPIN.header_bytes)
+    io_b = max(1, wl.io_bytes(payload))
+    bytes_per_ns_full = PSPIN.ingress_gbps / 8.0
+    return target_bytes_per_ns * size / (bytes_per_ns_full * io_b)
+
+
+def run_compute_mixture(scheduler: str, *, duration_us: float = 200.0,
+                        seed: int = 0) -> SimResult:
+    """Paper Fig. 12: Reduce + Histogram, each as Victim (64-128B pkts)
+    and Congestor (3-4KB pkts).  The paper's traces "saturate the PUs
+    within the first couple thousand cycles": we model that burst regime
+    with ingress shares summing to ~1.3x (FIFOs draining a burst), which
+    keeps every tenant backlogged.  Small packets cost more PU cycles per
+    byte (handler base cost amortizes poorly), so under RR — which grants
+    per *packet* — the congestors' ~2.5k-cycle kernels monopolize the PUs
+    and the victims starve; WLBVT equalizes priority-normalized PU time.
+    """
+    ks = [WORKLOADS["reduce"], WORKLOADS["reduce"],
+          WORKLOADS["histogram"], WORKLOADS["histogram"]]
+    sizes = [64, 4096, 96, 3584]
+    shares = [0.30, 0.35, 0.30, 0.35]
+    tenants = make_tenants(ks)
+    for t, name in zip(tenants, ["reduce_victim", "reduce_congestor",
+                                 "hist_victim", "hist_congestor"]):
+        t.name = name
+    traces = [make_trace(i, size=sizes[i], seed=seed + i, share=shares[i],
+                         duration_ns=duration_us * 1e3)
+              for i in range(4)]
+    sim = Simulator(tenants, scheduler=scheduler,
+                    frag=FragmentationPolicy(mode="hardware",
+                                             fragment_bytes=512),
+                    fifo_capacity=1 << 17, record_timeline=True)
+    return sim.run(merge_traces(*traces))
+
+
+def run_io_mixture(scheduler: str, *, frag: Optional[FragmentationPolicy]
+                   = None, duration_us: float = 200.0,
+                   seed: int = 0) -> SimResult:
+    """Paper Fig. 13/14: storage data-path offload mixture.  Read/write
+    victims issue small (64B) DMA ops; read/write congestors are
+    storage-RPC kernels (512B requests each triggering a 4 KiB DMA,
+    paper §7.4 "storage RPCs and TCP segment delivery"), sized so combined
+    DMA demand is ~1.1x the AXI.  Under the reference (RR + FIFO bus, no
+    fragmentation) victims are HoL-blocked behind the congestors' in-flight
+    4 KiB bursts; OSMOSIS (WLBVT + DWRR + hw fragmentation) bounds victim
+    latency at ~one fragment while preserving congestor byte throughput."""
+    read_v = WorkloadModel("read_victim", 40, 0.02, io_kind="dma_read",
+                           io_fixed_bytes=64)
+    read_c = WorkloadModel("read_congestor", 40, 0.02, io_kind="dma_read",
+                           io_fixed_bytes=4096)
+    write_v = WorkloadModel("write_victim", 40, 0.02, io_kind="dma_write",
+                            io_fixed_bytes=64)
+    write_c = WorkloadModel("write_congestor", 40, 0.02, io_kind="dma_write",
+                            io_fixed_bytes=4096)
+    ks = [read_v, read_c, write_v, write_c]
+    tenants = make_tenants(ks)
+    for t, k in zip(tenants, ks):
+        t.name = k.name
+    # equal ingress shares; the congestors' 8x DMA amplification (512B
+    # request -> 4 KiB transfer) pushes combined AXI demand to ~1.4x the
+    # bus, and their *blocking* IO holds PUs during transfers — under
+    # RR+FIFO that starves the victims of both PUs and bus slots
+    shares = [0.10, 0.10, 0.10, 0.10]
+    sizes = [64, 512, 64, 512]
+    # victims are finite bursts (first 60%); congestors span the full run,
+    # regaining exclusive bandwidth after victims drain (paper Fig. 13)
+    durs = [0.6, 1.0, 0.6, 1.0]
+    traces = [make_trace(i, size=sizes[i], share=shares[i], seed=seed + i,
+                         duration_ns=durs[i] * duration_us * 1e3)
+              for i in range(4)]
+    link_bns = PSPIN.ingress_gbps / 8.0
+    demand = [shares[i] * link_bns * ks[i].io_fixed_bytes / sizes[i]
+              for i in range(4)]
+    osmosis = scheduler == "wlbvt"
+    if frag is None:
+        frag = (FragmentationPolicy(mode="hardware", fragment_bytes=1024)
+                if osmosis else FragmentationPolicy(mode="off"))
+    sim = Simulator(tenants, scheduler=scheduler, frag=frag,
+                    arb="dwrr" if osmosis else "fifo",
+                    io_demand_weights=demand,
+                    fifo_capacity=1 << 15, record_timeline=True)
+    return sim.run(merge_traces(*traces))
+
+
+def service_time_vs_ppb(pkt_sizes: List[int]) -> Dict[str, List[Tuple[int, float, float]]]:
+    """Paper Fig. 3: per-workload single-packet service time vs PPB."""
+    out: Dict[str, List[Tuple[int, float, float]]] = {}
+    for name, wl in WORKLOADS.items():
+        rows = []
+        for p in pkt_sizes:
+            payload = max(0, p - PSPIN.header_bytes)
+            service = wl.compute_cycles(payload)
+            if wl.io_kind != "none":
+                service += wl.io_bytes(payload) * PSPIN.wire_ns_per_byte(
+                    PSPIN.axi_gbps)
+            budget = ppb(PSPIN.num_pus, p, PSPIN.ingress_gbps)
+            rows.append((p, service, budget))
+        out[name] = rows
+    return out

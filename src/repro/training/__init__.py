@@ -1,0 +1,7 @@
+"""Training substrate: optimizers, train step, checkpointing, data."""
+from repro.training.optimizer import (adafactor, adamw, cosine_schedule,
+                                      global_norm, make_optimizer)
+from repro.training.train_state import TrainState
+
+__all__ = ["adafactor", "adamw", "cosine_schedule", "global_norm",
+           "make_optimizer", "TrainState"]

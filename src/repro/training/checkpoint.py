@@ -1,0 +1,251 @@
+"""Sharded checkpointing with atomic commit and elastic resharding.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000420/
+        index.json            # tree structure, shapes, dtypes, shard files
+        <leaf-id>.s<k>.npy    # one file per saved shard (global slice)
+      LATEST                  # atomically renamed pointer file
+
+Save: every process writes only its *addressable* shards (each annotated
+with its global slice), then process 0 commits by renaming a tmp dir and
+rewriting LATEST — a torn save is never visible.  An optional background
+thread makes saves asynchronous (training continues while the previous
+step serializes).
+
+Restore: ``load(dir, target)`` assembles each device's required global
+slice from whichever saved shard files overlap it — the saved mesh and the
+restoring mesh are independent, so a checkpoint written on (data=16,
+model=16) restores onto (data=4, model=2) or a single host (elastic
+scaling / failure recovery).  Data-pipeline state rides in index.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# tree path <-> string ids
+# ---------------------------------------------------------------------------
+def _leaf_id(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):  # pragma: no cover
+            parts.append(str(k.name))
+        else:  # pragma: no cover
+            parts.append(str(k))
+    return ".".join(parts) or "root"
+
+
+def _slices_to_json(idx: Tuple[slice, ...], shape) -> List[List[int]]:
+    out = []
+    for s, n in zip(idx, shape):
+        start = 0 if s.start is None else int(s.start)
+        stop = n if s.stop is None else int(s.stop)
+        out.append([start, stop])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+def save(state: Any, ckpt_dir: str, step: int, *,
+         extra: Optional[Dict] = None, keep: int = 3,
+         process_index: Optional[int] = None) -> str:
+    """Write a checkpoint for ``step``; returns the committed directory."""
+    pid = jax.process_index() if process_index is None else process_index
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp{pid}"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    index: Dict[str, Any] = {
+        "step": step,
+        "treedef": None,   # reconstructed from target on load
+        "leaves": {},
+        "extra": extra or {},
+    }
+    for path, leaf in flat:
+        lid = _leaf_id(path)
+        arr = leaf if isinstance(leaf, jax.Array) else jnp.asarray(leaf)
+        entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                 "shards": []}
+        shards = getattr(arr, "addressable_shards", None)
+        if shards:
+            seen = set()
+            for k, sh in enumerate(shards):
+                idx = sh.index if sh.index else (slice(None),) * arr.ndim
+                idx_json = _slices_to_json(idx, arr.shape)
+                key = tuple(map(tuple, idx_json))
+                if key in seen:      # replicated shards: save once
+                    continue
+                seen.add(key)
+                fname = f"{lid}.s{k}.npy"
+                np.save(os.path.join(tmp, fname), np.asarray(sh.data))
+                entry["shards"].append({"file": fname, "index": idx_json})
+        else:  # plain numpy / scalar leaf
+            fname = f"{lid}.s0.npy"
+            np.save(os.path.join(tmp, fname), np.asarray(arr))
+            entry["shards"].append({
+                "file": fname,
+                "index": _slices_to_json((slice(None),) * arr.ndim,
+                                         arr.shape)})
+        index["leaves"][lid] = entry
+
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+    # commit (process 0 on multi-host; unconditional single-process)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _write_latest(ckpt_dir, step)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _write_latest(ckpt_dir: str, step: int) -> None:
+    tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(ckpt_dir, "LATEST"))
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp0"))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+# ---------------------------------------------------------------------------
+# async wrapper
+# ---------------------------------------------------------------------------
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a background thread (one in flight)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, state: Any, step: int, extra: Optional[Dict] = None):
+        self.wait()
+        # device->host copy happens here (synchronously, consistent snapshot)
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            try:
+                save(host_state, self.ckpt_dir, step,
+                     extra=extra, keep=self.keep)
+            except BaseException as e:  # pragma: no cover
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            raise self.last_error
+
+
+# ---------------------------------------------------------------------------
+# load (with resharding)
+# ---------------------------------------------------------------------------
+def load(ckpt_dir: str, target: Any, step: Optional[int] = None,
+         shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target`` (tree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional tree of Shardings; default
+    = each target leaf's own sharding (or unsharded host arrays).
+
+    Returns (state, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no LATEST in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [getattr(l, "sharding", None) for _, l in flat])
+
+    out_leaves = []
+    cache: Dict[str, np.ndarray] = {}
+
+    def read(fname: str) -> np.ndarray:
+        if fname not in cache:
+            cache[fname] = np.load(os.path.join(d, fname))
+        return cache[fname]
+
+    for (path, leaf), shd in zip(flat, shard_flat):
+        lid = _leaf_id(path)
+        if lid not in index["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {lid}")
+        entry = index["leaves"][lid]
+        shape = tuple(entry["shape"])
+        dtype = np.dtype(entry["dtype"])
+        if tuple(leaf.shape) != shape:
+            raise ValueError(
+                f"{lid}: target shape {leaf.shape} != saved {shape}")
+
+        def assemble(global_idx: Tuple[slice, ...]) -> np.ndarray:
+            want = [(0 if s.start is None else s.start,
+                     shape[i] if s.stop is None else s.stop)
+                    for i, s in enumerate(global_idx)]
+            out = np.zeros([b - a for a, b in want], dtype)
+            for sh in entry["shards"]:
+                have = [tuple(x) for x in sh["index"]]
+                inter = [(max(a, c), min(b, e))
+                         for (a, b), (c, e) in zip(want, have)]
+                if any(a >= b for a, b in inter):
+                    continue
+                src = tuple(slice(a - c, b - c)
+                            for (a, b), (c, _) in zip(inter, have))
+                dst = tuple(slice(a - w, b - w)
+                            for (a, b), (w, _) in zip(inter, want))
+                out[dst] = read(sh["file"])[src]
+            return out
+
+        if shd is not None and hasattr(shd, "device_set"):
+            arr = jax.make_array_from_callback(shape, shd, assemble)
+        else:
+            arr = jnp.asarray(assemble((slice(None),) * len(shape)), dtype)
+        out_leaves.append(arr)
+        cache.clear()
+
+    state = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return state, index.get("extra", {})

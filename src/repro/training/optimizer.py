@@ -1,0 +1,180 @@
+"""From-scratch optimizers (no optax in the container).
+
+Functional API mirroring optax:
+
+    opt = make_optimizer(cfg, total_steps)
+    state = opt.init(params)                 # sharded like params (ZeRO)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+AdamW keeps fp32 ``m``/``v`` sharded identically to the params (running the
+init inside jit makes the zeros inherit the param sharding = ZeRO-3 state
+partitioning for free).  Adafactor factors the second moment over the last
+two dims (row/col accumulators), the HBM-budget choice for the 400B MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (g, st, p) -> (u, st)
+
+
+# ---------------------------------------------------------------------------
+# schedules / utilities
+# ---------------------------------------------------------------------------
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup_steps: int = 100, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, st, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = st["step"] + 1
+        t = step.astype(jnp.float32)
+        lr = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            u = -lr * (mh / (jnp.sqrt(vh) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(st["m"])
+        flat_v = jax.tree.leaves(st["v"])
+        flat_p = jax.tree.leaves(params)
+        out = [one(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_st = {"m": jax.tree.unflatten(tree, [o[1] for o in out]),
+                  "v": jax.tree.unflatten(tree, [o[2] for o in out]),
+                  "step": step}
+        return updates, new_st
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+def adafactor(lr_fn, *, decay_pow: float = 0.8, clip_threshold: float = 1.0,
+              eps: float = 1e-30, weight_decay: float = 0.0,
+              max_grad_norm: float = 1.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(one, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, st, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = st["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay_pow)
+        lr = lr_fn(step)
+
+        def one(g, slot, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                v_row = beta2 * slot["v_row"] + (1 - beta2) * jnp.mean(g2, -1)
+                v_col = beta2 * slot["v_col"] + (1 - beta2) * jnp.mean(g2, -2)
+                r = v_row / jnp.maximum(
+                    jnp.mean(v_row, axis=-1, keepdims=True), eps)
+                vhat = r[..., None] * v_col[..., None, :]
+                new_slot = {"v_row": v_row, "v_col": v_col}
+            else:
+                vhat = beta2 * slot["v"] + (1 - beta2) * g2
+                new_slot = {"v": vhat}
+            u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr * u
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u, new_slot
+
+        is_slot = lambda x: isinstance(x, dict) and ("v" in x or "v_row" in x)
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_s = jax.tree.leaves(st["slots"], is_leaf=is_slot)
+        flat_p = jax.tree.leaves(params)
+        out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_slots = jax.tree.unflatten(tree, [o[1] for o in out])
+        return updates, {"slots": new_slots, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+def make_optimizer(cfg: ModelConfig, total_steps: int = 10_000,
+                   warmup_steps: int = 100) -> Optimizer:
+    lr_fn = cosine_schedule(cfg.learning_rate, total_steps, warmup_steps)
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr_fn)
+    if cfg.optimizer == "adamw":
+        return adamw(lr_fn)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

@@ -1,0 +1,33 @@
+"""TrainState pytree: params + optimizer slots + step + data-RNG."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray                    # int32 scalar
+    err_feedback: Optional[Any] = None   # gradient-compression residual
+
+    @classmethod
+    def create(cls, params, optimizer, *, compression: bool = False):
+        from repro.distributed import compression as C
+        return cls(
+            params=params,
+            opt_state=optimizer.init(params),
+            step=jnp.zeros((), jnp.int32),
+            err_feedback=C.init_error(params) if compression else None,
+        )
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step, s.err_feedback), None),
+    lambda _, ch: TrainState(*ch),
+)

@@ -1,0 +1,183 @@
+"""Train-step factory: loss, grad-accumulation, optimizer, sharding glue.
+
+``build_trainer(cfg, mesh)`` returns a ``Trainer`` whose ``train_step`` is
+a jitted (state, batch) -> (state, metrics) with:
+
+  * cross-entropy loss over vocab-sharded fp32 logits (+ z-loss, + MoE aux),
+  * gradient accumulation (lax.scan over microbatches; grads in fp32),
+  * AdamW / Adafactor with cosine schedule and global-norm clipping,
+  * ZeRO-3: params and optimizer slots sharded over data+model (rules in
+    distributed/sharding.py); XLA inserts the gradient reduce-scatters.
+
+The same factory produces the AOT-lowerable step used by launch/dryrun.py:
+every argument has an explicit PartitionSpec so ``.lower().compile()``
+works from ShapeDtypeStructs alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as SH
+from repro.models.registry import Model, build_model
+from repro.training import optimizer as OPT
+from repro.training.train_state import TrainState
+
+Z_LOSS = 1e-4
+MOE_AUX = 1e-2
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """logits fp32 (B,S,V); labels int32 (B,S), -1 = masked.
+    Returns (summed loss, token count)."""
+    mask = (labels >= 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # (B,S)
+    lab = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - lab) + Z_LOSS * jnp.square(lse)
+    nll = jnp.where(mask, nll, 0.0)
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def make_loss_fn(model: Model, cfg: ModelConfig, mesh: Optional[Mesh]):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        if mesh is not None:
+            logits = SH.constrain(logits, mesh,
+                                  ("pod", "data"), None, "model")
+        loss_sum, n_tok = cross_entropy(logits, batch["labels"])
+        loss = loss_sum / jnp.maximum(n_tok, 1.0)
+        if cfg.moe is not None:
+            loss = loss + MOE_AUX * aux / max(cfg.num_layers, 1)
+        return loss, {"ntok": n_tok}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Trainer:
+    cfg: ModelConfig
+    model: Model
+    optimizer: OPT.Optimizer
+    mesh: Optional[Mesh]
+    train_step: Callable[[TrainState, Dict[str, jnp.ndarray]],
+                         Tuple[TrainState, Dict[str, jnp.ndarray]]]
+    init_state: Callable[[jax.Array], TrainState]
+    state_pspecs: Any
+    batch_pspecs: Any
+
+
+def opt_state_pspecs(cfg: ModelConfig, params_sds: Any, pspecs: Any) -> Any:
+    """PartitionSpecs for the optimizer slots, mirroring param specs."""
+    if cfg.optimizer == "adamw":
+        return {"m": pspecs, "v": pspecs, "step": P()}
+
+    def one(sds, spec):
+        t = tuple(spec)
+        t = t + (None,) * (len(sds.shape) - len(t))
+        if len(sds.shape) >= 2:
+            return {"v_row": P(*t[:-1]), "v_col": P(*(t[:-2] + t[-1:]))}
+        return {"v": P(*t)}
+
+    slots = jax.tree.map(one, params_sds, pspecs,
+                         is_leaf=lambda x: hasattr(x, "shape"))
+    return {"slots": slots, "step": P()}
+
+
+def build_trainer(cfg: ModelConfig, mesh: Optional[Mesh] = None, *,
+                  total_steps: int = 10_000, warmup_steps: int = 100,
+                  grad_accum: Optional[int] = None,
+                  moe_impl: str = "gshard", donate: bool = True,
+                  seq_parallel: bool = False) -> Trainer:
+    model = build_model(cfg, moe_impl=moe_impl)
+    opt = OPT.make_optimizer(cfg, total_steps, warmup_steps)
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum
+    loss_fn = make_loss_fn(model, cfg, mesh)
+    # in-scan activation anchors; seq_parallel shards the residual stream
+    # over 'model' between blocks (memory term -42% on qwen3 train,
+    # EXPERIMENTS.md §Perf iteration 7) at the cost of more collectives
+    SH.set_activation_mesh(mesh, "model" if seq_parallel else None)
+
+    # ---- sharding specs ----------------------------------------------------
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if mesh is not None:
+        pspecs = SH.param_pspecs(cfg, params_sds, mesh, "train")
+        ospecs = opt_state_pspecs(cfg, params_sds, pspecs)
+        state_pspecs = TrainState(params=pspecs, opt_state=ospecs,
+                                  step=P(), err_feedback=None)
+        state_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), state_pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        pspecs = state_pspecs = state_shardings = None
+
+    # ---- step --------------------------------------------------------------
+    def _grads(params, batch):
+        if accum <= 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, grads
+
+        def mb(leaf):  # (B, ...) -> (A, B/A, ...)
+            B = leaf.shape[0]
+            return leaf.reshape(accum, B // accum, *leaf.shape[1:])
+
+        mbatch = jax.tree.map(mb, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+        def body(carry, xs):
+            loss_acc, g_acc = carry
+            (loss, aux), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, xs)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        (loss_sum, gsum), _ = jax.lax.scan(body, (0.0, zero), mbatch)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        return loss_sum / accum, grads
+
+    def step_fn(state: TrainState, batch):
+        loss, grads = _grads(state.params, batch)
+        gnorm = OPT.global_norm(grads)
+        updates, new_opt = opt.update(grads, state.opt_state, state.params)
+        new_params = OPT.apply_updates(state.params, updates)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1,
+                               err_feedback=state.err_feedback)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": new_state.step}
+        return new_state, metrics
+
+    def _init(rng):
+        params = model.init(rng)
+        return TrainState.create(params, opt)
+
+    if mesh is not None:
+        train_step = jax.jit(
+            step_fn,
+            in_shardings=(state_shardings, None),
+            out_shardings=(state_shardings, None),
+            donate_argnums=(0,) if donate else ())
+        init_state = jax.jit(_init, out_shardings=state_shardings)
+    else:
+        train_step = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+        init_state = jax.jit(_init)
+
+    return Trainer(cfg=cfg, model=model, optimizer=opt, mesh=mesh,
+                   train_step=train_step, init_state=init_state,
+                   state_pspecs=state_pspecs,
+                   batch_pspecs=None)

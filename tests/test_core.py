@@ -1,0 +1,134 @@
+"""OSMOSIS core-mechanism tests: fragmentation, admission, matching, EQ."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdmissionError, Event, EventKind, EventQueue, FMQ,
+                        FragmentationPolicy, MatchingEngine, MatchRule,
+                        PacketDescriptor, SegmentAllocator, ECTX, SLOPolicy,
+                        fragment_tokens, fragment_transfer)
+from repro.core.accounting import (TimeAveragedJain, jain_fairness,
+                                   weighted_jain)
+
+
+# ---------------------------------------------------------------------------
+# fragmentation (paper §6.2)
+# ---------------------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(nbytes=st.integers(1, 1 << 20), frag=st.integers(16, 8192))
+def test_fragment_transfer_invariants(nbytes, frag):
+    pol = FragmentationPolicy(mode="hardware", fragment_bytes=frag)
+    frags = fragment_transfer(pol, tenant=0, transfer_id=1, nbytes=nbytes)
+    assert sum(f.nbytes for f in frags) == nbytes
+    assert all(f.nbytes <= frag for f in frags)
+    assert all(f.nbytes > 0 for f in frags)
+    assert [f.seq for f in frags] == list(range(len(frags)))
+    assert [f.last for f in frags] == [False] * (len(frags) - 1) + [True]
+
+
+@settings(max_examples=100, deadline=None)
+@given(total=st.integers(1, 100_000), chunk=st.integers(1, 4096))
+def test_fragment_tokens_partition(total, chunk):
+    parts = list(fragment_tokens(total, chunk))
+    assert sum(n for _, n in parts) == total
+    offs = [o for o, _ in parts]
+    assert offs == sorted(offs) and offs[0] == 0
+    assert all(n <= chunk for _, n in parts)
+
+
+def test_fragmentation_off_is_identity():
+    pol = FragmentationPolicy(mode="off", fragment_bytes=64)
+    frags = fragment_transfer(pol, 0, 0, nbytes=10_000)
+    assert len(frags) == 1 and frags[0].nbytes == 10_000
+
+
+# ---------------------------------------------------------------------------
+# static memory admission (R3)
+# ---------------------------------------------------------------------------
+@settings(max_examples=100, deadline=None)
+@given(st.data())
+def test_allocator_segments_never_overlap(data):
+    pool = data.draw(st.integers(64, 1 << 16))
+    alloc = SegmentAllocator(pool_size=pool)
+    segs = {}
+    for t in range(data.draw(st.integers(1, 10))):
+        size = data.draw(st.integers(1, pool // 2))
+        try:
+            off, sz = alloc.allocate(t, size)
+        except AdmissionError:
+            continue
+        segs[t] = (off, sz)
+        assert off + sz <= pool
+    items = sorted(segs.values())
+    for (o1, s1), (o2, _) in zip(items, items[1:]):
+        assert o1 + s1 <= o2, "segments overlap"
+
+
+def test_allocator_rejects_over_quota_and_bounds_checks():
+    alloc = SegmentAllocator(pool_size=1024)
+    alloc.allocate(0, 512)
+    alloc.allocate(1, 512)
+    with pytest.raises(AdmissionError):
+        alloc.allocate(2, 1)
+    assert alloc.check_access(0, 0, 512)
+    assert not alloc.check_access(0, 0, 513)      # PMP: out of segment
+    assert not alloc.check_access(2, 0, 1)        # PMP: no segment
+    alloc.free(0)
+    alloc.allocate(2, 256)                        # reuse freed space
+
+
+# ---------------------------------------------------------------------------
+# matching engine / FMQ / EQ
+# ---------------------------------------------------------------------------
+def test_matching_three_tuple():
+    eng = MatchingEngine()
+    eng.install(MatchRule(dst_ip=10, dst_port=80), fmq_index=3)
+    eng.install(MatchRule(dst_ip=10), fmq_index=4)
+    assert eng.match({"dst_ip": 10, "dst_port": 80}) == 3
+    assert eng.match({"dst_ip": 10, "dst_port": 81}) == 4
+    assert eng.match({"dst_ip": 11}) == -1  # conventional NIC path
+
+
+def test_fmq_overflow_drops():
+    e = ECTX(0, "t", SLOPolicy())
+    q = FMQ(index=0, ectx=e, capacity=2)
+    assert q.push(PacketDescriptor(0, 64, 0.0))
+    assert q.push(PacketDescriptor(0, 64, 1.0))
+    assert not q.push(PacketDescriptor(0, 64, 2.0))
+    assert q.drops == 1 and len(q) == 2
+
+
+def test_event_queue_bounded():
+    eq = EventQueue(capacity=2)
+    for i in range(4):
+        eq.push(Event(0, EventKind.KERNEL_ERROR, float(i)))
+    assert eq.dropped == 2
+    evs = eq.drain()
+    assert len(evs) == 2 and evs[-1].time == 3.0
+
+
+def test_slo_rejects_nonpositive_priority():
+    with pytest.raises(ValueError):
+        SLOPolicy(priority=0.0)
+
+
+# ---------------------------------------------------------------------------
+# fairness metrics
+# ---------------------------------------------------------------------------
+def test_jain_bounds_and_known_values():
+    assert jain_fairness([1, 1, 1, 1]) == pytest.approx(1.0)
+    assert jain_fairness([1, 0, 0, 0]) == pytest.approx(0.25)
+    # paper Fig. 4 situation: congestor gets 2x the PUs
+    assert jain_fairness([2, 1]) == pytest.approx(0.9)
+
+
+def test_weighted_jain_priority_adjusts():
+    # 2x service at 2x priority is perfectly fair
+    assert weighted_jain([2, 1], [2, 1]) == pytest.approx(1.0)
+
+
+def test_time_averaged_jain():
+    j = TimeAveragedJain()
+    j.update([1, 1], dt=1.0)
+    j.update([1, 0], dt=1.0)
+    assert j.value == pytest.approx((1.0 + 0.5) / 2)
