@@ -2,10 +2,17 @@
 
 The ASIC numbers (area, 5-cycle decision) don't transfer to a software
 runtime; the algorithmic analogue is decision latency scaling with the
-number of FMQs.  We time the numpy control-plane path and the jitted jnp
-data-plane path; both are O(T) vectorized, matching the paper's linear
-area scaling, and the serving engine amortizes one decision per slot-fill
-over a multi-ms XLA step (the paper hides its 5 cycles under packet DMA).
+number of FMQs.  Three measurements:
+
+  * single-decision latency of the numpy control-plane path and the
+    jitted jnp data-plane path (both O(T) vectorized, matching the
+    paper's linear area scaling);
+  * an engine-level end-to-end decision benchmark: one full slot-fill
+    round (k winners, KV-quota caps folded in) via the pre-refactor
+    scalar per-tenant Python loop vs. the batched ``select_k`` path,
+    for T ∈ {16, 64, 128, 512};
+  * a numpy↔jnp parity sweep of ``select_k`` over randomized states
+    (integer-valued, so fp32/fp64 must agree exactly).
 """
 from __future__ import annotations
 
@@ -28,9 +35,9 @@ def time_numpy(T: int, iters: int = 2000) -> float:
 
 def time_jnp(T: int, iters: int = 200) -> float:
     import jax
-    import jax.numpy as jnp
     from repro.core import wlbvt as W
     st = W.init_state_jnp(np.ones(T))
+    import jax.numpy as jnp
     st["queue_len"] = jnp.asarray(np.random.randint(0, 3, T), jnp.int32)
     st["total_occup"] = jnp.asarray(np.random.rand(T) * 100, jnp.float32)
     st["bvt"] = jnp.asarray(np.random.rand(T) * 100 + 1, jnp.float32)
@@ -42,11 +49,119 @@ def time_jnp(T: int, iters: int = 200) -> float:
     return (time.perf_counter() - t0) / iters * 1e9
 
 
+# ---------------------------------------------------------------------------
+# engine-level decision round: scalar loop baseline vs batched select_k
+# ---------------------------------------------------------------------------
+def _mk_round_state(T: int, seed: int = 0):
+    from repro.core import wlbvt as W
+    rng = np.random.RandomState(seed)
+    st = W.WLBVTState.create(rng.choice([0.5, 1.0, 2.0, 4.0], size=T))
+    st.queue_len[:] = rng.randint(0, 4, T)
+    st.cur_occup[:] = rng.randint(0, 2, T)
+    st.total_occup[:] = rng.randint(0, 100, T).astype(float)
+    st.bvt[:] = rng.randint(1, 50, T).astype(float)
+    caps = rng.randint(1, 5, T)
+    return st, caps
+
+
+def _scalar_loop_round(st, caps, num_pus: int, k: int) -> list:
+    """The pre-refactor ``Engine._select``/``_assign_slots`` decision
+    path, verbatim: one O(T) Python scan per assigned slot."""
+    from repro.core import wlbvt as W
+    T = st.prio.shape[0]
+    picks = []
+    for _ in range(k):
+        limit = W.pu_limit(st, num_pus)
+        tput = st.tput()
+        best, best_m = -1, np.inf
+        for i in range(T):
+            if st.queue_len[i] <= 0:
+                continue
+            if st.cur_occup[i] >= limit[i] or st.cur_occup[i] >= caps[i]:
+                continue
+            m = tput[i] / st.prio[i]
+            if m < best_m:
+                best, best_m = i, m
+        if best < 0:
+            break
+        st.queue_len[best] -= 1
+        st.cur_occup[best] += 1
+        picks.append(best)
+    return picks
+
+
+def _time_round(T: int, batched: bool, k: int = 8, num_pus: int = 8,
+                iters: int = 200) -> float:
+    """ns per full k-winner engine scheduling round."""
+    from repro.core import wlbvt as W
+    st, caps = _mk_round_state(T)
+    ql0, co0 = st.queue_len.copy(), st.cur_occup.copy()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        st.queue_len[:] = ql0          # restore the round's input state
+        st.cur_occup[:] = co0
+        if batched:
+            W.select_k(st, num_pus, k, cap=caps)
+        else:
+            _scalar_loop_round(st, caps, num_pus, k)
+    return (time.perf_counter() - t0) / iters * 1e9
+
+
+def engine_decision_rows(Ts=(16, 64, 128, 512)):
+    rows = [("num_tenants", "scalar_loop_ns", "batched_ns", "speedup")]
+    speedups = {}
+    for T in Ts:
+        loop_ns = _time_round(T, batched=False)
+        batch_ns = _time_round(T, batched=True)
+        speedups[T] = loop_ns / max(batch_ns, 1e-9)
+        rows.append((T, round(loop_ns), round(batch_ns),
+                     round(speedups[T], 2)))
+    return rows, speedups
+
+
+def parity_sweep(Ts=(16, 64, 128, 512), cases: int = 10):
+    """numpy vs jitted-jnp select_k on randomized integer-valued states:
+    pick sequences must match exactly (fp32/fp64 both exact on ints)."""
+    import jax.numpy as jnp
+    from repro.core import wlbvt as W
+    rows = [("num_tenants", "cases", "pick_mismatches")]
+    total_bad = 0
+    for T in Ts:
+        bad = 0
+        for c in range(cases):
+            st, caps = _mk_round_state(T, seed=1000 + c)
+            sj = {
+                "prio": jnp.asarray(st.prio, jnp.float32),
+                "total_occup": jnp.asarray(st.total_occup, jnp.float32),
+                "bvt": jnp.asarray(st.bvt, jnp.float32),
+                "cur_occup": jnp.asarray(st.cur_occup, jnp.int32),
+                "queue_len": jnp.asarray(st.queue_len, jnp.int32),
+            }
+            picks_np = W.select_k(st, 8, 8, cap=caps)
+            picks_j, _ = W.select_k_jnp(sj, 8, 8,
+                                        cap=jnp.asarray(caps, jnp.int32))
+            bad += int(picks_np.tolist() != np.asarray(picks_j).tolist())
+        rows.append((T, cases, bad))
+        total_bad += bad
+    return rows, total_bad
+
+
 def run():
     rows = [("num_fmqs", "numpy_ns", "jnp_jit_ns")]
     for T in (8, 32, 128, 512, 2048):
         rows.append((T, round(time_numpy(T)), round(time_jnp(T))))
     head = {"decision_ns_at_128_fmqs": rows[3][1]}
+
+    eng_rows, speedups = engine_decision_rows()
+    rows.append(("", "", ""))
+    rows.extend(eng_rows)
+    head["engine_round_speedup_at_T128"] = round(speedups[128], 2)
+    head["engine_round_speedup_at_T512"] = round(speedups[512], 2)
+
+    par_rows, total_bad = parity_sweep()
+    rows.append(("", "", ""))
+    rows.extend(par_rows)
+    head["select_k_np_jnp_pick_mismatches"] = total_bad
     return rows, head
 
 

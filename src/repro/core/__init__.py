@@ -8,12 +8,12 @@ from repro.core.fragmentation import (Fragment, FragmentationPolicy,
                                       fragment_tokens, fragment_transfer)
 from repro.core.matching import MatchingEngine, MatchRule
 from repro.core.slo import ECTX, SLOPolicy
-from repro.core import wlbvt
+from repro.core import sched_generic, wlbvt
 
 __all__ = [
     "FCTTracker", "TimeAveragedJain", "jain_fairness", "weighted_jain",
     "AdmissionError", "SegmentAllocator", "Event", "EventKind", "EventQueue",
     "FMQ", "PacketDescriptor", "Fragment", "FragmentationPolicy",
     "fragment_tokens", "fragment_transfer", "MatchingEngine", "MatchRule",
-    "ECTX", "SLOPolicy", "wlbvt",
+    "ECTX", "SLOPolicy", "sched_generic", "wlbvt",
 ]

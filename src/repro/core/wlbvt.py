@@ -1,15 +1,22 @@
 """WLBVT / RR / WRR schedulers — paper Listing 1 and §5.3.
 
-Two numerically identical implementations of the Weight-Limited Borrowed
-Virtual Time policy:
+One backend-generic implementation (``core/sched_generic.py``) adapted to
+two surfaces (DESIGN.md §3):
 
-  * ``WLBVTState`` + ``select``/``advance`` on numpy arrays — used by the
-    cycle-accurate PsPIN simulator (event-driven, so per-cycle
+  * ``WLBVTState``/``DWRRState`` + ``select``/``select_k``/``advance``/
+    ``pu_limit``/``dwrr_select`` on numpy arrays — stateful wrappers used
+    by the cycle-accurate PsPIN simulator (event-driven, so per-cycle
     ``update_tput`` is folded into ``advance(dt)``).
-  * ``select_jnp``/``advance_jnp`` — jittable, used inside the TPU serving
-    engine's scheduling step.  ``tests/test_wlbvt.py`` asserts equivalence.
+  * ``*_jnp`` mirrors — jitted, functional, used inside the TPU serving
+    engine's scheduling step.  ``tests/test_sched_core.py`` asserts
+    numpy↔jnp parity on randomized states.
 
-Interpretation note (documented in DESIGN.md): Listing 1's
+``select_k(st, num_pus, k)`` is the batch API: the k winners of one
+scheduling round in a single call (a ``lax.scan`` under jit — one XLA
+invocation instead of k dispatches), replacing the per-tenant Python
+loops the serving engine and simulator used to carry.
+
+Interpretation note (DESIGN.md §3.2): Listing 1's
 ``pu_limit = ceil(len(FMQs) * prio / prio_sum)`` reads as the *PU count*
 times the normalized priority — with ``len(FMQs)`` the paper's 128-FMQ
 constant the limit would never bind at 32 PUs, contradicting §5.3's
@@ -19,9 +26,11 @@ constant the limit would never bind at 32 PUs, contradicting §5.3's
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
+
+from repro.core import sched_generic as G
+from repro.core.sched_generic import BIG, CEIL_EPS, GRANT_EPS  # noqa: F401
 
 try:  # jnp mirror (optional import so the simulator stays jax-free)
     import jax
@@ -29,11 +38,11 @@ try:  # jnp mirror (optional import so the simulator stays jax-free)
 except Exception:  # pragma: no cover
     jax = None
 
-BIG = 1e30
+_JIT_CACHE: dict = {}
 
 
 # ---------------------------------------------------------------------------
-# numpy implementation (simulator)
+# numpy surface (simulator control plane)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class WLBVTState:
@@ -57,51 +66,80 @@ class WLBVTState:
         return (self.queue_len > 0) | (self.cur_occup > 0)
 
     def tput(self) -> np.ndarray:
-        return self.total_occup / np.maximum(self.bvt, 1.0)
+        return G.tput(self.total_occup, self.bvt, np)
 
 
 def advance(st: WLBVTState, dt: float) -> None:
     """Fold `dt` cycles of update_tput (paper lines 8-13) in one step."""
-    act = st.active
-    st.total_occup[act] += st.cur_occup[act] * dt
-    st.bvt[act] += dt
+    st.total_occup, st.bvt = G.advance(
+        st.queue_len, st.cur_occup, st.total_occup, st.bvt, float(dt), np)
 
 
 def pu_limit(st: WLBVTState, num_pus: int) -> np.ndarray:
-    # Listing 1 line 4-5: prio_sum over *non-empty* FMQs — queues that
-    # drained release their share immediately (work conservation).
-    # The 1e-6 pre-ceil epsilon makes the hardware-width (fp32) and
-    # reference (fp64) implementations agree at exact-integer boundaries.
-    nonempty = st.queue_len > 0
-    psum = float(st.prio[nonempty].sum())
-    if psum <= 0:
-        return np.full(st.prio.shape, num_pus, np.int64)
-    return np.ceil(num_pus * st.prio / psum - 1e-6).astype(np.int64)
+    return G.pu_limit(st.prio, st.queue_len, num_pus, np).astype(np.int64)
 
 
-def select(st: WLBVTState, num_pus: int) -> int:
+def select(st: WLBVTState, num_pus: int, cap=None) -> int:
     """Paper lines 15-24: non-empty FMQ under its weighted PU cap with the
-    lowest priority-normalized throughput.  Returns -1 if none eligible."""
-    limit = pu_limit(st, num_pus)
-    eligible = (st.queue_len > 0) & (st.cur_occup < limit)
-    if not eligible.any():
-        return -1
-    metric = np.where(eligible, st.tput() / st.prio, BIG)
-    return int(np.argmin(metric))
+    lowest priority-normalized throughput.  Returns -1 if none eligible.
+    ``cap`` optionally folds an extra occupancy ceiling (e.g. KV-quota
+    slot caps) into eligibility."""
+    return int(G.select(st.prio, st.queue_len, st.cur_occup,
+                        st.total_occup, st.bvt, num_pus, np, cap=cap))
 
 
-def select_rr(rr_ptr: int, queue_len: np.ndarray) -> tuple:
-    """Plain round-robin baseline (paper Fig. 4/9).  Returns (idx, new_ptr)."""
-    T = queue_len.shape[0]
-    for k in range(T):
-        i = (rr_ptr + k) % T
-        if queue_len[i] > 0:
-            return i, (i + 1) % T
-    return -1, rr_ptr
+def select_k(st: WLBVTState, num_pus: int, k: int, cap=None) -> np.ndarray:
+    """Batch API: the k winners of one scheduling round.
+
+    Equivalent to k sequential ``select`` calls with the winner's queue
+    popped and occupancy charged between picks — ``st.queue_len`` and
+    ``st.cur_occup`` are updated in place accordingly (the caller then
+    dequeues the actual work items in pick order).  Returns a (k,) int64
+    array, -1-padded once nothing is eligible.
+    """
+    picks = np.full(k, -1, np.int64)
+    # Round invariants, hoisted: total_occup/bvt (hence the metric) never
+    # change between picks, and pu_limit only changes when a pick drains
+    # a queue to zero (the non-empty prio_sum shrinks — work conservation).
+    # Between drains each pick only flips its own winner's eligibility, so
+    # the masked metric is maintained incrementally: picks are O(argmin),
+    # not O(full eligibility rebuild) — decisions stay identical to the
+    # sequential scalar loop because every updated entry takes exactly the
+    # value a full rebuild would give it.
+    metric = G.tput(st.total_occup, st.bvt, np) / st.prio
+
+    def rebuild():
+        limit = G.pu_limit(st.prio, st.queue_len, num_pus, np)
+        eligible = (st.queue_len > 0) & (st.cur_occup < limit)
+        if cap is not None:
+            eligible = eligible & (st.cur_occup < cap)
+        return limit, np.where(eligible, metric, G.BIG)
+
+    limit, masked = rebuild()
+    for j in range(k):
+        i = int(np.argmin(masked))
+        if masked[i] >= G.BIG:      # nothing eligible
+            break
+        picks[j] = i
+        st.queue_len[i] -= 1
+        st.cur_occup[i] += 1
+        if st.queue_len[i] == 0:    # non-empty set shrank: limits change
+            limit, masked = rebuild()
+        else:
+            ok = st.cur_occup[i] < limit[i] and (
+                cap is None or st.cur_occup[i] < cap[i])
+            masked[i] = metric[i] if ok else G.BIG
+    return picks
+
+
+def select_rr(rr_ptr: int, queue_len: np.ndarray, mask=None) -> tuple:
+    """Round-robin baseline (paper Fig. 4/9).  Returns (idx, new_ptr)."""
+    idx, ptr = G.select_rr(rr_ptr, queue_len, np, mask=mask)
+    return int(idx), int(ptr)
 
 
 # ---------------------------------------------------------------------------
-# jnp mirror (serving engine — jittable)
+# jnp surface (serving engine — jittable)
 # ---------------------------------------------------------------------------
 def init_state_jnp(priorities):
     p = jnp.asarray(priorities, jnp.float32)
@@ -116,33 +154,54 @@ def init_state_jnp(priorities):
 
 
 def advance_jnp(st: dict, dt) -> dict:
-    act = (st["queue_len"] > 0) | (st["cur_occup"] > 0)
-    dt = jnp.asarray(dt, jnp.float32)
-    return dict(
-        st,
-        total_occup=st["total_occup"]
-        + jnp.where(act, st["cur_occup"].astype(jnp.float32) * dt, 0.0),
-        bvt=st["bvt"] + jnp.where(act, dt, 0.0),
-    )
+    total_occup, bvt = G.advance(
+        st["queue_len"], st["cur_occup"], st["total_occup"], st["bvt"],
+        jnp.asarray(dt, jnp.float32), jnp)
+    return dict(st, total_occup=total_occup, bvt=bvt)
 
 
 def pu_limit_jnp(st: dict, num_pus: int):
-    nonempty = st["queue_len"] > 0
-    psum = jnp.sum(jnp.where(nonempty, st["prio"], 0.0))
-    return jnp.where(
-        psum > 0,
-        jnp.ceil(num_pus * st["prio"] / jnp.maximum(psum, 1e-9) - 1e-6),
-        float(num_pus)).astype(jnp.int32)
+    return G.pu_limit(st["prio"], st["queue_len"], num_pus,
+                      jnp).astype(jnp.int32)
 
 
 def select_jnp(st: dict, num_pus: int):
     """Returns idx (int32, -1 if none eligible)."""
-    limit = pu_limit_jnp(st, num_pus)
-    tput = st["total_occup"] / jnp.maximum(st["bvt"], 1.0)
-    eligible = (st["queue_len"] > 0) & (st["cur_occup"] < limit)
-    metric = jnp.where(eligible, tput / st["prio"], BIG)
-    idx = jnp.argmin(metric)
-    return jnp.where(jnp.any(eligible), idx, -1).astype(jnp.int32)
+    return G.select(st["prio"], st["queue_len"], st["cur_occup"],
+                    st["total_occup"], st["bvt"], num_pus,
+                    jnp).astype(jnp.int32)
+
+
+def _select_k_fn(num_pus: int, k: int, has_cap: bool):
+    key = ("select_k", num_pus, k, has_cap)
+    if key not in _JIT_CACHE:
+        def run(prio, queue_len, cur_occup, total_occup, bvt, cap):
+            def body(carry, _):
+                ql, co = carry
+                idx, ql, co = G.select_round(
+                    prio, ql, co, total_occup, bvt, num_pus, jnp,
+                    cap=cap if has_cap else None)
+                return (ql, co), idx.astype(jnp.int32)
+            (ql, co), picks = jax.lax.scan(
+                body, (queue_len, cur_occup), None, length=k)
+            return picks, ql, co
+        _JIT_CACHE[key] = jax.jit(run)
+    return _JIT_CACHE[key]
+
+
+def select_k_jnp(st: dict, num_pus: int, k: int, cap=None):
+    """Jitted batch select: one XLA call for the whole round.
+
+    Returns ``(picks, new_state)`` — picks is a (k,) int32 array,
+    -1-padded; the new state carries the drained queue lengths and
+    charged occupancies.
+    """
+    has_cap = cap is not None
+    fn = _select_k_fn(int(num_pus), int(k), has_cap)
+    dummy = st["cur_occup"] if not has_cap else jnp.asarray(cap)
+    picks, ql, co = fn(st["prio"], st["queue_len"], st["cur_occup"],
+                       st["total_occup"], st["bvt"], dummy)
+    return picks, dict(st, queue_len=ql, cur_occup=co)
 
 
 # ---------------------------------------------------------------------------
@@ -165,34 +224,52 @@ def dwrr_select(st: DWRRState, head_size: np.ndarray, pending: np.ndarray,
     """Pick the next queue whose head fragment fits its deficit.
 
     head_size: (Q,) bytes; pending: (Q,) bool.  Returns queue idx (its
-    deficit is charged) or -1 if nothing pending.  Deficit top-up jumps
-    directly to the first round at which *some* pending queue becomes
-    eligible (O(1) virtual-time advance — equivalent to iterating rounds,
-    robust to heads many quanta large), then grants in round-robin order
-    from the saved pointer.  Idle queues cannot hoard more than one
-    head+quantum of credit.
+    deficit is charged) or -1 if nothing pending.  See
+    ``sched_generic.dwrr_select`` for the O(1) top-up semantics.
     """
-    Q = st.weights.shape[0]
-    if not pending.any():
-        return -1
+    idx, deficit, ptr = G.dwrr_select(
+        st.weights, st.deficit, st.ptr, np.asarray(head_size, np.float64),
+        np.asarray(pending, bool), float(quantum), np)
+    st.deficit = deficit
+    st.ptr = int(ptr)
+    return int(idx)
 
-    def grant() -> int:
-        for k in range(Q):
-            i = (st.ptr + k) % Q
-            if pending[i] and st.deficit[i] >= head_size[i] - 1e-9:
-                st.deficit[i] -= head_size[i]
-                st.ptr = (i + 1) % Q
-                return i
-        return -1
 
-    got = grant()                     # spend credit from earlier rounds
-    if got >= 0:
-        return got
-    inc = quantum * st.weights
-    need = np.where(pending, head_size - st.deficit, np.inf)
-    rounds = int(np.ceil(np.maximum(need, 0.0)[pending]
-                         / inc[pending]).min())
-    st.deficit[pending] += max(rounds, 1) * inc[pending]
-    # idle credit cap: at most one head + one round of quantum
-    np.minimum(st.deficit, head_size + inc, out=st.deficit)
-    return grant()
+def dwrr_select_k(st: DWRRState, head_size: np.ndarray, counts: np.ndarray,
+                  quantum: float, k: int) -> np.ndarray:
+    """Batch DWRR: up to k grants of one arbitration round.
+
+    ``counts`` (int array) holds the number of queued fragments per
+    queue and is decremented in place as grants are issued; the deficit
+    state advances exactly as k sequential ``dwrr_select`` calls would.
+    Returns a (k,) int64 array of queue indices, -1-padded.
+    """
+    picks = np.full(k, -1, np.int64)
+    for j in range(k):
+        i = dwrr_select(st, head_size, counts > 0, quantum)
+        if i < 0:
+            break
+        counts[i] -= 1
+        picks[j] = i
+    return picks
+
+
+def dwrr_state_jnp(weights) -> dict:
+    w = jnp.asarray(weights, jnp.float32)
+    return {"weights": w, "deficit": jnp.zeros_like(w),
+            "ptr": jnp.asarray(0, jnp.int32)}
+
+
+def dwrr_select_jnp(st: dict, head_size, pending, quantum):
+    """Jitted DWRR grant.  Returns ``(idx, new_state)``."""
+    key = ("dwrr",)
+    if key not in _JIT_CACHE:
+        def run(weights, deficit, ptr, head, pending, quantum):
+            return G.dwrr_select(weights, deficit, ptr, head, pending,
+                                 quantum, jnp)
+        _JIT_CACHE[key] = jax.jit(run)
+    idx, deficit, ptr = _JIT_CACHE[key](
+        st["weights"], st["deficit"], st["ptr"],
+        jnp.asarray(head_size, jnp.float32), jnp.asarray(pending, bool),
+        jnp.asarray(quantum, jnp.float32))
+    return idx.astype(jnp.int32), dict(st, deficit=deficit, ptr=ptr)

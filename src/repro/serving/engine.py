@@ -45,7 +45,8 @@ class EngineConfig:
     prefill_slots_per_step: int = 2   # per-step prefill budget (PPB analog)
     scheduler: str = "wlbvt"          # "wlbvt" | "rr" (baseline)
     arbiter: str = "dwrr"             # "dwrr" | "fifo" (baseline)
-    max_tenants: int = 16
+    max_tenants: int = 128            # FMQ table size; decisions are O(T)
+    #                                   vectorized so headroom is cheap
     kv_overcommit: float = 1.0        # R3: 1.0 = strict static reservation
 
 
@@ -151,26 +152,56 @@ class Engine:
                                       self.step_count))
         return e
 
-    def destroy_ectx(self, tenant_id: int) -> None:
+    def destroy_ectx(self, tenant_id: int) -> List[Event]:
+        """Tear down a tenant: kill in-flight requests, reject queued ones
+        (each with an event), release the KV segment, and retire the
+        tenant's EventQueue.  Returns the final drained event list — the
+        queue itself is removed, so this is the last chance to observe
+        the tenant's events."""
         for s, r in enumerate(self.slot_req):
             if r is not None and r.tenant_id == tenant_id:
                 self._finish(s, RequestStatus.KILLED)
+        eq = self.eq.pop(tenant_id, None)
+        for req in self.queues.pop(tenant_id, ()):
+            req.status = RequestStatus.REJECTED
+            req.finish_step = self.step_count
+            self.done.append(req)
+            if eq is not None:
+                eq.push(Event(tenant_id, EventKind.EVICTED, self.step_count,
+                              f"rid={req.rid} rejected: ectx destroyed"))
         self.slots.evict(tenant_id)
         self.ectx.pop(tenant_id, None)
-        self.queues.pop(tenant_id, None)
         self._installed[tenant_id] = False
         self.st.queue_len[tenant_id] = 0
+        self.st.prio[tenant_id] = 1.0
+        self.st.total_occup[tenant_id] = 0.0   # a reused tenant id must not
+        self.st.bvt[tenant_id] = 0.0           # inherit WLBVT service history
+        self.dwrr.deficit[tenant_id] = 0.0
+        if eq is not None:
+            eq.push(Event(tenant_id, EventKind.EVICTED, self.step_count))
+            return eq.drain()
+        return []
 
     def submit(self, req: Request) -> Request:
         if req.tenant_id not in self.ectx:
             req.status = RequestStatus.REJECTED
             return req
-        limit = self.ectx[req.tenant_id].slo.kernel_cycle_limit
         if req.prompt_len + req.max_new_tokens > self.cfg.max_len:
             req.status = RequestStatus.REJECTED
             self.eq[req.tenant_id].push(Event(
                 req.tenant_id, EventKind.MEMORY_FAULT, self.step_count,
                 "request exceeds slot KV capacity"))
+            return req
+        # Watchdog admission check (R5): a request whose prompt alone blows
+        # the kernel cycle budget would be killed at its first decode token
+        # — reject it up front instead of burning prefill work on it.
+        limit = self.ectx[req.tenant_id].slo.kernel_cycle_limit
+        if limit and req.prompt_len + 1 > limit:
+            req.status = RequestStatus.REJECTED
+            self.eq[req.tenant_id].push(Event(
+                req.tenant_id, EventKind.CYCLE_BUDGET_EXCEEDED,
+                self.step_count,
+                f"prompt {req.prompt_len} cannot fit cycle budget {limit}"))
             return req
         req.rid = self._next_rid
         self._next_rid += 1
@@ -185,46 +216,47 @@ class Engine:
     # ------------------------------------------------------------------
     # data plane step
     # ------------------------------------------------------------------
-    def _select(self) -> int:
+    def _select_round(self, k: int) -> List[int]:
+        """The winners of one scheduling round: up to ``k`` tenant picks,
+        KV-quota caps folded into eligibility vectorially (R1 + R3).
+        ``st.queue_len``/``st.cur_occup`` are charged per pick."""
+        caps = self.slots.quota_caps(self.cfg.max_tenants)
         if self.cfg.scheduler == "rr":
-            for k in range(self.cfg.max_tenants):
-                i = (self.rr_ptr + k) % self.cfg.max_tenants
-                if self.st.queue_len[i] > 0 and self.slots.can_take(i):
-                    self.rr_ptr = (i + 1) % self.cfg.max_tenants
-                    return i
-            return -1
-        # WLBVT with the KV-quota cap folded into eligibility (R1 + R3)
-        limit = W.pu_limit(self.st, self.cfg.max_slots)
-        tput = self.st.tput()
-        best, best_m = -1, np.inf
-        for i in range(self.cfg.max_tenants):
-            if self.st.queue_len[i] <= 0:
-                continue
-            if self.st.cur_occup[i] >= limit[i] or not self.slots.can_take(i):
-                continue
-            m = tput[i] / self.st.prio[i]
-            if m < best_m:
-                best, best_m = i, m
-        return best
+            picks: List[int] = []
+            for _ in range(k):
+                i, ptr = W.select_rr(self.rr_ptr, self.st.queue_len,
+                                     mask=self.st.cur_occup < caps)
+                if i < 0:
+                    break
+                self.rr_ptr = ptr
+                self.st.queue_len[i] -= 1
+                self.st.cur_occup[i] += 1
+                picks.append(i)
+            return picks
+        return [int(t) for t in
+                W.select_k(self.st, self.cfg.max_slots, k, cap=caps)
+                if t >= 0]
 
     def _assign_slots(self) -> None:
-        while self.slots.free_slots().size > 0:
-            t = self._select()
-            if t < 0:
-                return
+        k = int(self.slots.free_slots().size)
+        if k == 0:
+            return
+        picks = self._select_round(k)
+        if not picks:
+            return
+        keep = np.ones(self.cfg.max_slots, bool)
+        for t in picks:
             req = self.queues[t].popleft()
-            self.st.queue_len[t] -= 1
             s = self.slots.take(t)
-            self.st.cur_occup[t] += 1
             req.slot = s
             req.status = RequestStatus.PREFILL
             req.start_step = self.step_count
             self.slot_req[s] = req
             self.lengths[s] = 0
-            # invalidate any stale cache rows for this slot (R3 isolation)
-            keep = np.ones(self.cfg.max_slots, bool)
             keep[s] = False
-            self.exe.reset(keep)
+        # invalidate stale cache rows for every slot assigned this step in
+        # ONE batched call (R3 isolation, single XLA invocation)
+        self.exe.reset(keep)
 
     def _finish(self, slot: int, status: RequestStatus) -> None:
         req = self.slot_req[slot]
@@ -258,16 +290,14 @@ class Engine:
             chosen = order[: self.cfg.prefill_slots_per_step]
         else:
             T = self.cfg.max_tenants
-            for _ in range(self.cfg.prefill_slots_per_step):
-                pend = np.array([bool(pending_slots.get(i))
-                                 for i in range(T)])
-                if not pend.any():
-                    break
-                head = np.full(T, float(C))
-                i = W.dwrr_select(self.dwrr, head, pend, quantum=float(C))
-                if i < 0:
-                    break
-                chosen.append(pending_slots[i].pop(0))
+            counts = np.zeros(T, np.int64)
+            for i, ss in pending_slots.items():
+                counts[i] = len(ss)
+            head = np.full(T, float(C))
+            picks = W.dwrr_select_k(self.dwrr, head, counts,
+                                    quantum=float(C),
+                                    k=self.cfg.prefill_slots_per_step)
+            chosen = [pending_slots[int(i)].pop(0) for i in picks if i >= 0]
 
         if not chosen:
             return

@@ -54,6 +54,15 @@ class SlotManager:
     def can_take(self, tenant: int) -> bool:
         return self.held(tenant) < self.quota_slots.get(tenant, 0)
 
+    def quota_caps(self, num_tenants: int) -> np.ndarray:
+        """Vectorized per-tenant slot caps (0 for unadmitted tenants) —
+        folded into batched scheduler eligibility (R3)."""
+        caps = np.zeros(num_tenants, np.int64)
+        for t, c in self.quota_slots.items():
+            if 0 <= t < num_tenants:
+                caps[t] = c
+        return caps
+
     def take(self, tenant: int) -> int:
         if not self.can_take(tenant):
             raise AdmissionError(f"tenant {tenant} over KV quota")

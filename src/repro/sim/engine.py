@@ -190,24 +190,31 @@ class Simulator:
         self._dispatch()
 
     # -- PU scheduling ---------------------------------------------------------
-    def _select(self) -> int:
-        if self.sched_kind == "rr":
-            idx, self.rr_ptr = W.select_rr(self.rr_ptr, self.st.queue_len)
-            return idx
-        return W.select(self.st, self.hw.num_pus)
+    def _pop_and_start(self, idx: int) -> None:
+        pkt = self.fmqs[idx].pop()
+        assert pkt is not None
+        self.free_pus -= 1
+        self._start_kernel(idx, pkt)
 
     def _dispatch(self) -> None:
-        while self.free_pus > 0:
-            idx = self._select()
+        if self.sched_kind == "rr":
+            while self.free_pus > 0:
+                idx, self.rr_ptr = W.select_rr(self.rr_ptr,
+                                               self.st.queue_len)
+                if idx < 0:
+                    return
+                self.st.queue_len[idx] -= 1
+                self.st.cur_occup[idx] += 1
+                self._pop_and_start(idx)
+            return
+        if self.free_pus <= 0:
+            return
+        # one batched WLBVT round fills every free PU (select_k charges
+        # queue_len/cur_occup per pick, matching the scalar loop)
+        for idx in W.select_k(self.st, self.hw.num_pus, self.free_pus):
             if idx < 0:
-                return
-            fmq = self.fmqs[idx]
-            pkt = fmq.pop()
-            assert pkt is not None
-            self.st.queue_len[idx] -= 1
-            self.st.cur_occup[idx] += 1
-            self.free_pus -= 1
-            self._start_kernel(idx, pkt)
+                break
+            self._pop_and_start(int(idx))
 
     def _start_kernel(self, idx: int, pkt: PacketDescriptor) -> None:
         fmq = self.fmqs[idx]

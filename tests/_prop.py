@@ -1,0 +1,100 @@
+"""Property-testing compat shim: hypothesis when installed, else a seeded
+fallback so tier-1 never dies at collection (hypothesis lives in the
+optional ``test`` extra — see pyproject.toml).
+
+The fallback implements exactly the strategy subset our tests use
+(integers / floats / booleans / lists / data) and runs each ``@given``
+body on a fixed number of deterministically seeded examples — weaker
+than hypothesis's shrinking search, but the invariants still get
+exercised on randomized inputs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback: fixed seeded example cases
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: None)
+
+    class _Data:
+        """Stand-in for hypothesis's interactive data object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.randint(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _Strategies()
+
+    def _materialize(strategy, rng):
+        if isinstance(strategy, _DataStrategy):
+            return _Data(rng)
+        return strategy.draw(rng)
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            base_seed = zlib.crc32(fn.__name__.encode("utf-8"))
+
+            # NOTE: no functools.wraps — pytest must see a zero-arg
+            # signature, not the strategy-filled parameters.
+            def wrapper():
+                for ex in range(_FALLBACK_EXAMPLES):
+                    rng = _np.random.RandomState((base_seed + ex) % (2**31))
+                    pos = [_materialize(s, rng) for s in gargs]
+                    kw = {k: _materialize(s, rng)
+                          for k, s in gkwargs.items()}
+                    fn(*pos, **kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -1,7 +1,7 @@
 """OSMOSIS core-mechanism tests: fragmentation, admission, matching, EQ."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st  # hypothesis or seeded fallback
 
 from repro.core import (AdmissionError, Event, EventKind, EventQueue, FMQ,
                         FragmentationPolicy, MatchingEngine, MatchRule,

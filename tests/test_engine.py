@@ -6,7 +6,8 @@ from repro.configs import smoke_config
 from repro.core.admission import AdmissionError
 from repro.core.events import EventKind
 from repro.core.slo import SLOPolicy
-from repro.serving.engine import Engine, EngineConfig, ModelExecutor
+from repro.serving.engine import (Engine, EngineConfig, ModelExecutor,
+                                  NullExecutor)
 from repro.serving.request import Request, RequestStatus
 
 
@@ -171,6 +172,91 @@ def test_slot_reuse_does_not_leak_kv_between_tenants():
         return done[0].generated
 
     assert generate(False) == generate(True)
+
+
+def test_submit_rejects_request_that_cannot_fit_cycle_budget():
+    """Watchdog admission check: a prompt that alone blows the kernel
+    cycle budget would be killed at its first decode token — it must be
+    rejected at submit with a CYCLE_BUDGET_EXCEEDED event, not admitted
+    and have prefill burned on it."""
+    eng = Engine(_cfg())
+    eng.create_ectx(0, SLOPolicy(kv_quota_tokens=256 * 8,
+                                 kernel_cycle_limit=40))
+    r = eng.submit(Request(0, np.ones(40, np.int32), max_new_tokens=8))
+    assert r.status == RequestStatus.REJECTED
+    assert EventKind.CYCLE_BUDGET_EXCEEDED in {
+        e.kind for e in eng.poll_events(0)}
+    # boundary: a prompt that can still emit >= 1 token is admitted (the
+    # runtime watchdog takes over from there)
+    r2 = eng.submit(Request(0, np.ones(39, np.int32), max_new_tokens=8))
+    assert r2.status == RequestStatus.QUEUED
+    eng.run_until_idle()
+    assert eng.metrics()["tenants"][0]["killed"] == 1   # r2, at token 2
+
+
+def test_destroy_ectx_rejects_queued_and_retires_event_queue():
+    eng = Engine(_cfg())
+    eng.create_ectx(0, SLOPolicy(kv_quota_tokens=256 * 8))
+    _flood(eng, 0, 12, plen=64, new=64)     # 8 slots -> 4 stay queued
+    for _ in range(5):
+        eng.step()
+    queued = [r for q in [eng.queues[0]] for r in q]
+    assert queued, "scenario must leave requests queued"
+    events = eng.destroy_ectx(0)
+    assert all(r.status == RequestStatus.REJECTED for r in queued)
+    assert 0 not in eng.eq, "EventQueue entry must not leak"
+    assert 0 not in eng.queues
+    kinds = {e.kind for e in events}
+    assert EventKind.EVICTED in kinds
+    assert EventKind.REQUEST_KILLED in kinds    # the in-flight ones
+    evicted_rids = {int(e.detail.split()[0].split("=")[1])
+                    for e in events if e.kind == EventKind.EVICTED
+                    and e.detail}
+    assert evicted_rids == {r.rid for r in queued}
+
+
+class _CountingExecutor(NullExecutor):
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.reset_calls = []
+
+    def reset(self, keep):
+        self.reset_calls.append(np.asarray(keep).copy())
+
+
+def test_assign_slots_batches_cache_reset_into_one_call():
+    """Filling S slots in a step must invalidate them in ONE reset call
+    (one XLA invocation), with every assigned slot in the mask."""
+    exe = _CountingExecutor(_cfg())
+    eng = Engine(_cfg(kv_overcommit=2.0), executor=exe)
+    eng.create_ectx(0, SLOPolicy(kv_quota_tokens=256 * 8))
+    eng.create_ectx(1, SLOPolicy(kv_quota_tokens=256 * 8))
+    _flood(eng, 0, 10, plen=32, new=8)
+    _flood(eng, 1, 10, plen=32, new=8)
+    eng.step()
+    assert len(exe.reset_calls) == 1
+    keep = exe.reset_calls[0]
+    assigned = np.array([r is not None for r in eng.slot_req])
+    assert assigned.sum() == eng.cfg.max_slots
+    assert (~keep == assigned).all()
+
+
+def test_default_config_scales_to_128_tenants():
+    """The default FMQ table now has 128-tenant headroom and the batched
+    scheduler serves the full population end-to-end."""
+    cfg = EngineConfig(kv_overcommit=16.0)   # pool: 8*512*16 = 128 quotas
+    assert cfg.max_tenants == 128
+    eng = Engine(cfg)
+    for t in range(128):
+        eng.create_ectx(t, SLOPolicy(kv_quota_tokens=512))
+    rng = np.random.RandomState(0)
+    for t in range(0, 128, 7):
+        eng.submit(Request(t, rng.randint(1, 90, 12).astype(np.int32),
+                           max_new_tokens=4))
+    eng.run_until_idle()
+    m = eng.metrics()
+    done = sum(d["done"] for d in m["tenants"].values())
+    assert done == len(range(0, 128, 7))
 
 
 def test_destroy_ectx_frees_quota_and_kills_inflight():

@@ -1,7 +1,7 @@
 """WLBVT / DWRR scheduler unit + property tests (paper Listing 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st  # hypothesis or seeded fallback
 
 from repro.core import wlbvt as W
 
