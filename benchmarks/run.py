@@ -21,10 +21,12 @@ def main(argv=None) -> int:
                     help="shorter sim durations")
     args = ap.parse_args(argv)
 
-    from benchmarks import paper_figs, sched_cost, serving_fairness
+    from benchmarks import (paper_figs, sched_cost, serving_fairness,
+                            telemetry_overhead)
     suite = dict(paper_figs.ALL)
     suite["sched_cost"] = sched_cost.run
     suite["serving_fairness"] = serving_fairness.run
+    suite["telemetry_overhead"] = telemetry_overhead.run
 
     names = [args.only] if args.only else list(suite)
     headlines = {}
@@ -48,8 +50,17 @@ def main(argv=None) -> int:
     out = os.path.join(os.path.dirname(__file__), "results",
                        "headlines.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
+    # merge: an --only run must not drop other benchmarks' entries
+    merged = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    merged.update(headlines)
     with open(out, "w") as f:
-        json.dump(headlines, f, indent=1)
+        json.dump(merged, f, indent=1)
     print(f"\nwrote {out}")
     return 0
 

@@ -15,8 +15,11 @@ from typing import Deque, List, Optional
 class EventKind(enum.Enum):
     KERNEL_ERROR = "kernel_error"
     CYCLE_BUDGET_EXCEEDED = "cycle_budget_exceeded"
+    TOTAL_BUDGET_EXCEEDED = "total_budget_exceeded"
     MEMORY_FAULT = "memory_fault"
     QUEUE_OVERFLOW = "queue_overflow"
+    ECN_MARK = "ecn_mark"
+    BACKPRESSURE = "backpressure"
     REQUEST_KILLED = "request_killed"
     ADMITTED = "admitted"
     EVICTED = "evicted"

@@ -28,6 +28,8 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry-report", action="store_true",
+                    help="print the per-tenant telemetry plane report")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, smoke_config
@@ -66,6 +68,9 @@ def main(argv=None) -> int:
         d = m["tenants"][t]
         print(f"  tenant{t}: done={d['done']} killed={d['killed']} "
               f"mean_fct={d['mean_fct']:.1f} steps")
+    if args.telemetry_report:
+        from repro.telemetry import format_console
+        print(format_console(eng.telemetry_report()))
     return 0
 
 

@@ -35,6 +35,8 @@ from repro.core.events import Event, EventKind, EventQueue
 from repro.core.slo import ECTX, SLOPolicy
 from repro.serving.kv_cache import SlotManager
 from repro.serving.request import Request, RequestStatus
+from repro.telemetry import (G_IDX, GAUGES, Telemetry, apply_to_scheduler,
+                             compute_signals, tenant_report)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +50,10 @@ class EngineConfig:
     max_tenants: int = 128            # FMQ table size; decisions are O(T)
     #                                   vectorized so headroom is cheap
     kv_overcommit: float = 1.0        # R3: 1.0 = strict static reservation
+    telemetry: bool = True            # per-tenant metric plane (DESIGN.md §6)
+    telemetry_backend: str = "numpy"  # "numpy" | "jnp" (jitted commits)
+    qos_interval: int = 0             # steps between QoS control updates;
+    #                                   0 = static weights (no control loop)
 
 
 class NullExecutor:
@@ -126,6 +132,18 @@ class Engine:
         self.done: List[Request] = []
         self.decode_steps = 0
         self.prefill_chunks = 0
+        # telemetry plane (DESIGN.md §6): staged per event, committed once
+        # per step — a single jitted call when telemetry_backend="jnp"
+        self.tel = (Telemetry(T, backend=ecfg.telemetry_backend)
+                    if ecfg.telemetry else None)
+        self.controller = None               # see attach_controller
+        self._ctrl_baseline = None
+        self._admit = np.ones(T, bool)       # controller backpressure gate
+        self.tokens_used = np.zeros(T)       # lifetime token spend (billing)
+        # SLO-configured base weights per knob (tracked through ECTX
+        # create/destroy); the controller scales these, never overwrites
+        self._prio_base = np.ones(T)
+        self._dwrr_base = np.ones(T)
 
     # ------------------------------------------------------------------
     # control plane (R5: processed before data-path work each step)
@@ -147,6 +165,8 @@ class Engine:
         self.eq[tenant_id] = EventQueue()
         self.st.prio[tenant_id] = slo.priority
         self.dwrr.weights[tenant_id] = slo.dma_priority
+        self._prio_base[tenant_id] = slo.priority
+        self._dwrr_base[tenant_id] = slo.dma_priority
         self._installed[tenant_id] = True
         self.eq[tenant_id].push(Event(tenant_id, EventKind.ADMITTED,
                                       self.step_count))
@@ -172,6 +192,17 @@ class Engine:
         self.slots.evict(tenant_id)
         self.ectx.pop(tenant_id, None)
         self._installed[tenant_id] = False
+        self._admit[tenant_id] = True
+        self.tokens_used[tenant_id] = 0.0  # budget is per tenant identity
+        self._prio_base[tenant_id] = 1.0
+        self._dwrr_base[tenant_id] = 1.0
+        if self.controller is not None:    # nor AIMD boost / pause state
+            self.controller.reset_tenant(tenant_id, base_weight=1.0)
+        if self.tel is not None:           # nor telemetry history
+            self.tel.reset_tenant(tenant_id)
+            if self._ctrl_baseline is not None:
+                self._ctrl_baseline["counts"][tenant_id] = 0
+                self._ctrl_baseline["hist"][tenant_id] = 0
         self.st.queue_len[tenant_id] = 0
         self.st.prio[tenant_id] = 1.0
         self.st.total_occup[tenant_id] = 0.0   # a reused tenant id must not
@@ -182,12 +213,43 @@ class Engine:
             return eq.drain()
         return []
 
+    def attach_controller(self, controller) -> None:
+        """Install a ``QoSController``; it runs every ``qos_interval``
+        steps, adapting WLBVT/DWRR weights and the admission gate."""
+        if self.tel is None or self.cfg.qos_interval <= 0:
+            raise ValueError(
+                "attach_controller requires EngineConfig.telemetry=True "
+                "and qos_interval > 0 — the control loop would never run")
+        self.controller = controller
+
     def submit(self, req: Request) -> Request:
         if req.tenant_id not in self.ectx:
             req.status = RequestStatus.REJECTED
             return req
+        if self.tel is not None:
+            self.tel.inc("arrivals", req.tenant_id)
+            self.tel.inc("bytes_in", req.tenant_id, req.prompt_len)
+        if not self._admit[req.tenant_id]:
+            # QoS controller backpressure (hysteresis on congestion)
+            req.status = RequestStatus.REJECTED
+            self._reject_count(req.tenant_id)
+            self.eq[req.tenant_id].push(Event(
+                req.tenant_id, EventKind.BACKPRESSURE, self.step_count))
+            return req
+        # Lifetime billing budget (R5): a tenant whose total token spend
+        # exhausted its allowance gets no further admission.
+        tlimit = self.ectx[req.tenant_id].slo.total_cycle_limit
+        if tlimit and self.tokens_used[req.tenant_id] >= tlimit:
+            req.status = RequestStatus.REJECTED
+            self._reject_count(req.tenant_id)
+            self.eq[req.tenant_id].push(Event(
+                req.tenant_id, EventKind.TOTAL_BUDGET_EXCEEDED,
+                self.step_count,
+                f"lifetime budget {tlimit} tokens exhausted"))
+            return req
         if req.prompt_len + req.max_new_tokens > self.cfg.max_len:
             req.status = RequestStatus.REJECTED
+            self._reject_count(req.tenant_id)
             self.eq[req.tenant_id].push(Event(
                 req.tenant_id, EventKind.MEMORY_FAULT, self.step_count,
                 "request exceeds slot KV capacity"))
@@ -198,6 +260,7 @@ class Engine:
         limit = self.ectx[req.tenant_id].slo.kernel_cycle_limit
         if limit and req.prompt_len + 1 > limit:
             req.status = RequestStatus.REJECTED
+            self._reject_count(req.tenant_id)
             self.eq[req.tenant_id].push(Event(
                 req.tenant_id, EventKind.CYCLE_BUDGET_EXCEEDED,
                 self.step_count,
@@ -209,6 +272,10 @@ class Engine:
         self.queues[req.tenant_id].append(req)
         self.st.queue_len[req.tenant_id] += 1
         return req
+
+    def _reject_count(self, tenant_id: int) -> None:
+        if self.tel is not None:
+            self.tel.inc("rejected", tenant_id)
 
     def poll_events(self, tenant_id: int) -> List[Event]:
         return self.eq[tenant_id].drain()
@@ -258,7 +325,8 @@ class Engine:
         # ONE batched call (R3 isolation, single XLA invocation)
         self.exe.reset(keep)
 
-    def _finish(self, slot: int, status: RequestStatus) -> None:
+    def _finish(self, slot: int, status: RequestStatus,
+                kill_kind: EventKind = EventKind.REQUEST_KILLED) -> None:
         req = self.slot_req[slot]
         req.status = status
         req.finish_step = self.step_count
@@ -267,9 +335,15 @@ class Engine:
         self.slots.release(slot)
         self.slot_req[slot] = None
         self.done.append(req)
+        if self.tel is not None:
+            killed = status == RequestStatus.KILLED
+            self.tel.inc("killed" if killed else "completed", t)
+            if not killed:
+                self.tel.inc("bytes_out", t, len(req.generated))
+            self.tel.lat(t, max(req.fct, 1))   # sojourn incl. queueing
         if status == RequestStatus.KILLED:
-            self.eq[t].push(Event(t, EventKind.REQUEST_KILLED,
-                                  self.step_count, f"rid={req.rid}"))
+            self.eq[t].push(Event(t, kill_kind, self.step_count,
+                                  f"rid={req.rid}"))
 
     def _prefill_phase(self) -> None:
         """Chunked prefill with DWRR tenant arbitration (R2): at most
@@ -316,11 +390,15 @@ class Engine:
             n = int(valid_n[s])
             r.prefill_done += n
             self.lengths[s] += n
+            self._charge_tokens(r.tenant_id, n)
             r.chunk_steps.append(self.step_count)
             if r.prefill_done >= r.prompt_len:
                 r.status = RequestStatus.DECODE
                 r.generated.append(int(nxt[s]))
                 self.last_tok[s] = nxt[s]
+            if self._over_total_budget(r.tenant_id):
+                self._finish(s, RequestStatus.KILLED,
+                             kill_kind=EventKind.TOTAL_BUDGET_EXCEEDED)
 
     def _decode_phase(self) -> None:
         active = np.array([
@@ -336,11 +414,58 @@ class Engine:
             self.lengths[s] += 1
             r.generated.append(int(nxt[s]))
             self.last_tok[s] = nxt[s]
+            self._charge_tokens(r.tenant_id, 1)
             limit = self.ectx[r.tenant_id].slo.kernel_cycle_limit
-            if limit and r.total_tokens > limit:
+            if self._over_total_budget(r.tenant_id):
+                self._finish(s, RequestStatus.KILLED,
+                             kill_kind=EventKind.TOTAL_BUDGET_EXCEEDED)
+            elif limit and r.total_tokens > limit:
                 self._finish(s, RequestStatus.KILLED)
             elif len(r.generated) >= r.max_new_tokens:
                 self._finish(s, RequestStatus.DONE)
+
+    def _charge_tokens(self, tenant: int, n: int) -> None:
+        self.tokens_used[tenant] += n
+        if self.tel is not None:
+            self.tel.inc("tokens", tenant, n)
+
+    def _over_total_budget(self, tenant: int) -> bool:
+        t = self.ectx.get(tenant)
+        return bool(t and t.slo.total_cycle_limit
+                    and self.tokens_used[tenant] > t.slo.total_cycle_limit)
+
+    def _kv_pressure(self) -> np.ndarray:
+        caps = self.slots.quota_caps(self.cfg.max_tenants)
+        held = np.bincount(self.slots.slot_tenant[self.slots.slot_tenant >= 0],
+                           minlength=self.cfg.max_tenants)
+        return held / np.maximum(caps, 1)
+
+    def _commit_telemetry(self) -> None:
+        """Per-step telemetry flush + gauge window (DESIGN.md §6): one
+        counter/latency commit and one ring push — a single jitted call
+        each on the jnp backend, so the data plane never syncs."""
+        tel = self.tel
+        gauges = np.zeros((len(GAUGES), self.cfg.max_tenants))
+        gauges[G_IDX["occupancy"]] = self.st.cur_occup
+        gauges[G_IDX["queue_len"]] = self.st.queue_len
+        gauges[G_IDX["service_rate"]] = tel.staged("tokens")
+        gauges[G_IDX["kv_pressure"]] = self._kv_pressure()
+        tel.commit()
+        tel.commit_window(gauges)
+        if (self.controller is not None and self.cfg.qos_interval
+                and self.step_count > 0
+                and self.step_count % self.cfg.qos_interval == 0):
+            snap = tel.snapshot()
+            sig = compute_signals(
+                tel, prio=self.st.prio, total_occup=self.st.total_occup,
+                bvt=self.st.bvt, kv_pressure=gauges[G_IDX["kv_pressure"]],
+                baseline=self._ctrl_baseline, snap=snap)
+            self._ctrl_baseline = snap
+            act = self.controller.update(sig)
+            apply_to_scheduler(act, (self.st.prio, self._prio_base),
+                               (self.dwrr.weights, self._dwrr_base),
+                               installed=self._installed)
+            self._admit = act.admit
 
     def step(self) -> None:
         # R5: control traffic first
@@ -356,6 +481,8 @@ class Engine:
             self.fairness.update(
                 self.st.cur_occup[act], 1.0,
                 weights=self.st.prio[act])
+        if self.tel is not None:
+            self._commit_telemetry()
         self.step_count += 1
 
     def run(self, steps: int) -> None:
@@ -392,3 +519,11 @@ class Engine:
             "prefill_chunks": self.prefill_chunks,
             "tenants": per_tenant,
         }
+
+    def telemetry_report(self) -> Dict[str, Any]:
+        """Per-tenant telemetry plane report (latency units = steps)."""
+        if self.tel is None:
+            return {"telemetry": "disabled"}
+        self.tel.commit()
+        names = {t: e.name for t, e in self.ectx.items()}
+        return tenant_report(self.tel, names=names)

@@ -22,11 +22,13 @@ import numpy as np
 from repro.configs.osmosis_pspin import PSPIN, PsPINConfig
 from repro.core import (ECTX, EventKind, Event, EventQueue, FMQ,
                         FragmentationPolicy, MatchingEngine,
-                        PacketDescriptor, fragment_transfer)
+                        PacketDescriptor, PushResult, fragment_transfer)
 from repro.core.accounting import jain_fairness
 from repro.core import wlbvt as W
 from repro.sim.traffic import TracePacket
 from repro.sim.workloads import WorkloadModel
+from repro.telemetry import (G_IDX, GAUGES, Telemetry, apply_to_scheduler,
+                             compute_signals)
 
 
 @dataclasses.dataclass
@@ -56,6 +58,9 @@ class SimResult:
     jain_io_timeavg: float
     timeline: Optional[dict] = None
     events: List[Event] = dataclasses.field(default_factory=list)
+    telemetry: Optional[Telemetry] = None
+    sched_state: Optional[dict] = None   # final prio/total_occup/bvt +
+    #                                      FIFO pressure, for signal reads
 
     def throughput_gbps(self, tenant: int) -> float:
         st = self.stats[tenant]
@@ -78,7 +83,9 @@ class Simulator:
                  hw: PsPINConfig = PSPIN,
                  fifo_capacity: int = 4096,
                  io_demand_weights=None,
-                 record_timeline: bool = False):
+                 record_timeline: bool = False,
+                 controller=None,
+                 control_interval_ns: float = 8000.0):
         self.hw = hw
         self.sched_kind = scheduler
         self.frag = frag or FragmentationPolicy(mode="off")
@@ -136,6 +143,20 @@ class Simulator:
         self._io_bytes_cum = np.zeros(T)
         self._tl: Dict[str, list] = {"t": [], "occup": [], "io_win": [],
                                      "qlen": []}
+        # telemetry plane (always on: committed at window boundaries) +
+        # optional closed-loop QoS controller (telemetry/controller.py)
+        self.tel = Telemetry(T, backend="numpy")
+        self.controller = controller
+        # SLO-configured base weights per knob: the controller scales
+        # these (live = base * boost), never overwrites them
+        self._sched_base = (self.st.prio.copy(), self.dwrr.weights.copy(),
+                            self.egress_dwrr.weights.copy())
+        self._ctrl_every = max(1, int(round(control_interval_ns
+                                            / self.io_window_ns)))
+        self._ctrl_baseline = None
+        self._win_count = 0
+        self._cycles_used = np.zeros(T)      # lifetime PU-cycles (billing)
+        self._admit = np.ones(T, bool)       # controller backpressure gate
 
     # -- event machinery ---------------------------------------------------
     def _post(self, t: float, fn: Callable[[], None]) -> None:
@@ -170,10 +191,39 @@ class Simulator:
                 self._tl["occup"].append(occ.copy())
                 self._tl["io_win"].append(self._win_io.copy())
                 self._tl["qlen"].append(self.st.queue_len.copy())
+            self._commit_window(occ)
             self._win_io[:] = 0.0
             self._win_act = self.st.active.copy()
             self._win_start += self.io_window_ns
         self._last_adv = t
+
+    def _commit_window(self, occ: np.ndarray) -> None:
+        """Flush staged telemetry + push gauge samples for one IO window;
+        run the QoS control loop every ``_ctrl_every`` windows."""
+        self.tel.commit()
+        gauges = np.zeros((len(GAUGES), len(self.fmqs)))
+        gauges[G_IDX["occupancy"]] = occ
+        gauges[G_IDX["queue_len"]] = self.st.queue_len
+        gauges[G_IDX["service_rate"]] = self._win_io / self.io_window_ns
+        gauges[G_IDX["kv_pressure"]] = [len(f) / f.capacity
+                                        for f in self.fmqs]
+        self.tel.commit_window(gauges)
+        self._win_count += 1
+        if (self.controller is not None
+                and self._win_count % self._ctrl_every == 0):
+            snap = self.tel.snapshot()
+            sig = compute_signals(
+                self.tel, prio=self.st.prio,
+                total_occup=self.st.total_occup, bvt=self.st.bvt,
+                kv_pressure=gauges[G_IDX["kv_pressure"]],
+                baseline=self._ctrl_baseline, snap=snap)
+            self._ctrl_baseline = snap
+            act = self.controller.update(sig)
+            pb, db, eb = self._sched_base
+            apply_to_scheduler(act, (self.st.prio, pb),
+                               (self.dwrr.weights, db),
+                               (self.egress_dwrr.weights, eb))
+            self._admit = act.admit
 
     # -- ingress -------------------------------------------------------------
     def _arrival(self, pkt: TracePacket) -> None:
@@ -181,11 +231,28 @@ class Simulator:
         fmq = self.fmqs[i]
         st = self.stats[i]
         st.first_arrival = min(st.first_arrival, self.now)
-        ok = fmq.push(PacketDescriptor(i, pkt.size, self.now))
-        if not ok:
+        self.tel.inc("arrivals", i)
+        self.tel.inc("bytes_in", i, pkt.size)
+        if not self._admit[i]:
+            # controller backpressure: source-throttled before the FMQ.
+            # Telemetry counts this as "rejected", NOT "drops" — drop_rate
+            # feeds the controller's pressure signal, and counting gated
+            # arrivals there would latch a paused tenant paused forever.
             st.drops += 1
+            self.tel.inc("rejected", i)
+            self.eq.push(Event(i, EventKind.BACKPRESSURE, self.now))
+            return
+        res = fmq.push(PacketDescriptor(i, pkt.size, self.now))
+        if res == PushResult.DROPPED:
+            st.drops += 1
+            self.tel.inc("drops", i)
             self.eq.push(Event(i, EventKind.QUEUE_OVERFLOW, self.now))
             return
+        if res == PushResult.MARKED:
+            # paper's mark-before-drop path: congestion signal surfaced
+            # through the tenant EQ and the telemetry plane before losses
+            self.tel.inc("ecn_marks", i)
+            self.eq.push(Event(i, EventKind.ECN_MARK, self.now))
         self.st.queue_len[i] += 1
         self._dispatch()
 
@@ -226,6 +293,17 @@ class Simulator:
         killed = bool(limit and comp > limit)
         if killed:
             comp = float(limit)
+        # lifetime budget (billing, §5.2): the watchdog also stops a kernel
+        # at the tenant's remaining *total* cycle allowance — mirrors the
+        # per-kernel limit, but the exhaustion is permanent
+        tlimit = fmq.ectx.slo.total_cycle_limit
+        budget_killed = False
+        if tlimit:
+            remaining = float(tlimit) - self._cycles_used[idx]
+            if comp > remaining:
+                budget_killed = killed = True
+                comp = max(0.0, remaining)
+        self._cycles_used[idx] += comp
         io_bytes = 0 if killed else wl.io_bytes(payload)
 
         if io_bytes and self.frag.mode == "software":
@@ -234,8 +312,9 @@ class Simulator:
 
         t_comp = t0 + comp
 
-        def fin(t_done: float, was_killed=killed):
-            self._finish_kernel(idx, pkt, t0, t_done, was_killed, payload)
+        def fin(t_done: float, was_killed=killed, was_budget=budget_killed):
+            self._finish_kernel(idx, pkt, t0, t_done, was_killed, payload,
+                                budget_killed=was_budget)
 
         if io_bytes:
             self._post(t_comp, lambda: self._submit_transfer(
@@ -244,19 +323,27 @@ class Simulator:
         else:
             self._post(t_comp, lambda: fin(self.now))
 
-    def _finish_kernel(self, idx, pkt, t_start, t_done, killed, payload):
+    def _finish_kernel(self, idx, pkt, t_start, t_done, killed, payload,
+                       budget_killed=False):
         st = self.stats[idx]
         self.st.cur_occup[idx] -= 1
         self.free_pus += 1
         if killed:
             st.killed += 1
-            self.eq.push(Event(idx, EventKind.CYCLE_BUDGET_EXCEEDED,
-                               self.now))
+            self.tel.inc("killed", idx)
+            self.eq.push(Event(
+                idx, EventKind.TOTAL_BUDGET_EXCEEDED if budget_killed
+                else EventKind.CYCLE_BUDGET_EXCEEDED, self.now))
         else:
             st.completed += 1
             st.served_payload_bytes += payload
+            self.tel.inc("completed", idx)
+            self.tel.inc("bytes_out", idx, payload)
         st.kernel_times.append(self.now - (t_start - self.hw.dma_setup_cycles))
         st.last_completion = self.now
+        # sojourn (arrival -> completion) latency: queueing included, so
+        # the control plane sees congestion the service time alone hides
+        self.tel.lat(idx, self.now - pkt.arrival)
         self.fmqs[idx].completed += 1
         self._dispatch()
 
@@ -405,6 +492,7 @@ class Simulator:
         tl = None
         if self.record_timeline:
             tl = {k: np.array(v) for k, v in self._tl.items()}
+        self.tel.commit()        # flush any partial-window staged samples
         return SimResult(
             time=self.now,
             stats=self.stats,
@@ -414,4 +502,12 @@ class Simulator:
                              if self._jain_io_t else 1.0),
             timeline=tl,
             events=self.eq.drain(),
+            telemetry=self.tel,
+            sched_state={
+                "prio": self.st.prio.copy(),
+                "total_occup": self.st.total_occup.copy(),
+                "bvt": self.st.bvt.copy(),
+                "kv_pressure": np.array([len(f) / f.capacity
+                                         for f in self.fmqs]),
+            },
         )

@@ -1,7 +1,10 @@
-"""Scenario builders for the paper's experiments (§3, §7.3, §7.4)."""
+"""Scenario builders for the paper's experiments (§3, §7.3, §7.4) plus
+the telemetry-plane closed-loop QoS scenario (DESIGN.md §6)."""
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.configs.osmosis_pspin import PSPIN
 from repro.core import ECTX, FragmentationPolicy, SLOPolicy
@@ -9,6 +12,7 @@ from repro.sim.engine import SimResult, Simulator
 from repro.sim.traffic import equal_share_traces, make_trace, merge_traces
 from repro.sim.workloads import (WORKLOADS, WorkloadModel, ppb,
                                  spin_workload)
+from repro.telemetry import QoSController
 
 
 def make_tenants(kernels: List[WorkloadModel],
@@ -78,6 +82,42 @@ def run_standalone(workload_name: str, *, pkt_size: int,
             if osmosis else FragmentationPolicy(mode="off"))
     sim = Simulator(tenants, scheduler="wlbvt" if osmosis else "rr",
                     frag=frag, arb="dwrr" if osmosis else "fifo")
+    return sim.run(trace)
+
+
+def run_qos_closed_loop(controller: bool = True, *,
+                        p99_target_ns: float = 2000.0,
+                        duration_us: float = 300.0,
+                        control_interval_ns: float = 8000.0,
+                        seed: int = 0) -> SimResult:
+    """Closed-loop QoS (DESIGN.md §6): a latency-SLO victim whose PU
+    demand (~17 of 32 PUs) slightly exceeds its static equal-weight share
+    (16), against a heavy congestor (~25 PUs demand).
+
+    With static weights the victim's backlog — and so its p99 sojourn
+    latency — grows without bound for the whole run.  With the
+    ``QoSController`` the telemetry plane's interval p99 signal drives
+    AIMD weight boosts until the victim's WLBVT cap covers its demand,
+    then decays the boost back; the victim's p99 stabilizes near its
+    target while weighted fairness (normalized by the *current* weights)
+    stays ~1.
+    """
+    victim = spin_workload("victim", 2.0)
+    congestor = spin_workload("congestor", 2.0)
+    tenants = make_tenants([congestor, victim])
+    trace = merge_traces(
+        # congestor: 1024B packets, ~25 PUs of demand
+        make_trace(0, size=1024, share=0.25, seed=seed,
+                   duration_ns=duration_us * 1e3),
+        # victim: 256B latency probes, ~17 PUs of demand (cap is 16)
+        make_trace(1, size=256, share=0.175, seed=seed + 1,
+                   duration_ns=duration_us * 1e3))
+    ctrl = None
+    if controller:
+        ctrl = QoSController(base_weights=np.ones(2),
+                             p99_targets=[0.0, p99_target_ns])
+    sim = Simulator(tenants, scheduler="wlbvt", controller=ctrl,
+                    control_interval_ns=control_interval_ns)
     return sim.run(trace)
 
 

@@ -1,0 +1,28 @@
+"""Per-tenant telemetry plane + closed-loop QoS control (DESIGN.md §6).
+
+``metrics``    — fixed-shape array-native collectors (counters, log
+                 histograms, gauge rings); one backend-generic kernel set
+                 for numpy (sim, eager) and jnp-under-jit (serving).
+``signals``    — derived congestion/SLO signals read by the control plane.
+``controller`` — AIMD weight adaptation + hysteretic admission gate.
+``report``     — per-tenant JSON/console reports.
+"""
+from repro.telemetry.metrics import (COUNTERS, GAUGES, C_IDX, G_IDX,
+                                     HIST_BUCKETS, RING_WINDOW, Telemetry,
+                                     bucket_index, bucket_value, create_state,
+                                     hist_add, hist_quantile, record_step,
+                                     record_window, ring_mean, ring_push)
+from repro.telemetry.signals import (SignalFrame, compute_signals,
+                                     wlbvt_service_debt)
+from repro.telemetry.controller import (ControlAction, QoSConfig,
+                                        QoSController, apply_to_scheduler)
+from repro.telemetry.report import dump_json, format_console, tenant_report
+
+__all__ = [
+    "COUNTERS", "GAUGES", "C_IDX", "G_IDX", "HIST_BUCKETS", "RING_WINDOW",
+    "Telemetry", "bucket_index", "bucket_value", "create_state", "hist_add",
+    "hist_quantile", "record_step", "record_window", "ring_mean", "ring_push",
+    "SignalFrame", "compute_signals", "wlbvt_service_debt",
+    "ControlAction", "QoSConfig", "QoSController", "apply_to_scheduler",
+    "dump_json", "format_console", "tenant_report",
+]

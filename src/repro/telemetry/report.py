@@ -1,0 +1,60 @@
+"""Per-tenant telemetry reports: JSON-able dicts + console rendering."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.telemetry import metrics as M
+from repro.telemetry.signals import SignalFrame
+
+
+def tenant_report(tel, *, names: Optional[Dict[int, str]] = None,
+                  signals: Optional[SignalFrame] = None,
+                  only_active: bool = True) -> dict:
+    """Fold a ``Telemetry`` plane (and optionally a ``SignalFrame``) into
+    a JSON-able per-tenant report."""
+    snap = tel.snapshot()
+    counts, hist = snap["counts"], snap["hist"]
+    p50 = M.hist_quantile(hist, 0.50, np)
+    p99 = M.hist_quantile(hist, 0.99, np)
+    seen = counts.sum(axis=1) + hist.sum(axis=1)
+    tenants = {}
+    for t in range(tel.T):
+        if only_active and seen[t] == 0:
+            continue
+        row = {n: float(counts[t, i]) for n, i in M.C_IDX.items()}
+        row["p50_latency"] = float(p50[t])
+        row["p99_latency"] = float(p99[t])
+        row["latency_samples"] = float(hist[t].sum())
+        if names and t in names:
+            row["name"] = names[t]
+        if signals is not None:
+            row["service_debt"] = float(signals.service_debt[t])
+            row["ecn_rate"] = float(signals.ecn_rate[t])
+            row["kv_pressure"] = float(signals.kv_pressure[t])
+        tenants[t] = row
+    out = {"num_tenants": tel.T, "backend": tel.backend, "tenants": tenants}
+    if signals is not None:
+        out["jain_weighted"] = signals.jain_weighted
+    return out
+
+
+def format_console(report: dict) -> str:
+    cols = ["arrivals", "completed", "killed", "drops", "ecn_marks",
+            "p50_latency", "p99_latency"]
+    lines = [" tenant  " + "  ".join(f"{c:>12}" for c in cols)]
+    for t, row in sorted(report["tenants"].items()):
+        label = row.get("name", f"tenant{t}")[:8]
+        vals = "  ".join(f"{row[c]:>12.6g}" for c in cols)
+        lines.append(f" {label:<8}" + vals)
+    if "jain_weighted" in report:
+        lines.append(f" weighted Jain fairness: "
+                     f"{report['jain_weighted']:.4f}")
+    return "\n".join(lines)
+
+
+def dump_json(report: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
