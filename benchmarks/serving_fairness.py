@@ -2,36 +2,21 @@
 
 The serving analogue of paper Figs. 9/12: congestor tenants with 4x the
 work per request vs interactive victims, WLBVT+DWRR vs RR+FIFO, measured
-by time-averaged Jain and per-tenant FCT.  Uses the scheduling-only
-executor so the numbers isolate policy (not model compute).
+by time-averaged Jain and per-tenant FCT.  Runs the registered
+``serve_congestor_victim`` scenario through the unified runtime API
+(scheduling-only NullExecutor, so the numbers isolate policy).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.slo import SLOPolicy
-from repro.serving.engine import Engine, EngineConfig
-from repro.serving.request import Request
+from repro.api import get_scenario, run_scenario
 
 
 def _run(scheduler: str, arbiter: str, seed: int = 0):
-    ecfg = EngineConfig(max_slots=16, max_len=512, prefill_chunk=64,
-                        prefill_slots_per_step=4, scheduler=scheduler,
-                        arbiter=arbiter, max_tenants=4)
-    eng = Engine(ecfg)
-    for t in range(4):   # equal static reservations: 4 slots each (R3)
-        eng.create_ectx(t, SLOPolicy(kv_quota_tokens=512 * 4))
-    rng = np.random.RandomState(seed)
-    for i in range(30):
-        # tenants 0-1: congestors (long prompts+outputs); 2-3: victims
-        for t in (0, 1):
-            eng.submit(Request(t, rng.randint(1, 90, 256).astype(np.int32),
-                               max_new_tokens=64))
-        for t in (2, 3):
-            eng.submit(Request(t, rng.randint(1, 90, 16).astype(np.int32),
-                               max_new_tokens=16))
-    eng.run_until_idle()
-    return eng.metrics()
+    spec = get_scenario("serve_congestor_victim", scheduler=scheduler,
+                        arbiter=arbiter, seed=seed)
+    return run_scenario(spec, "serve")
 
 
 def run():
@@ -40,12 +25,12 @@ def run():
     for name, (sched, arb) in {
             "reference(rr+fifo)": ("rr", "fifo"),
             "osmosis(wlbvt+dwrr)": ("wlbvt", "dwrr")}.items():
-        m = _run(sched, arb)
-        fc = np.mean([m["tenants"][t]["mean_fct"] for t in (0, 1)])
-        fv = np.mean([m["tenants"][t]["mean_fct"] for t in (2, 3)])
-        rows.append((name, round(m["jain_timeavg"], 4), round(fc, 1),
+        rep = _run(sched, arb)
+        fc = np.mean([rep.tenants[t].extra["mean_fct"] for t in (0, 1)])
+        fv = np.mean([rep.tenants[t].extra["mean_fct"] for t in (2, 3)])
+        rows.append((name, round(rep.jain_pu, 4), round(fc, 1),
                      round(fv, 1)))
-        head[name] = {"jain": round(m["jain_timeavg"], 4),
+        head[name] = {"jain": round(rep.jain_pu, 4),
                       "victim_fct": round(fv, 1)}
     ref = head["reference(rr+fifo)"]
     osm = head["osmosis(wlbvt+dwrr)"]

@@ -1,7 +1,9 @@
 """Multi-tenant serving with OSMOSIS: the paper's Congestor/Victim
-experiment (Figs. 9/12) run through the real engine + a real model.
+experiment (Figs. 9/12) run through the unified runtime API + a real
+model.
 
-Three tenants with different SLOs share one continuous-batching engine:
+Three tenants with different SLOs share one continuous-batching engine
+(the registered ``serve_three_class`` scenario):
   * tenant 0 "batch"        — long prompts, long outputs (the Congestor)
   * tenant 1 "interactive"  — short prompts, short outputs (the Victim)
   * tenant 2 "premium"      — like interactive but 2x priority
@@ -15,13 +17,10 @@ interactive tenants behind the congestor's prefill fragments.
 """
 import argparse
 
-import numpy as np
-
+from repro.api import ServeRuntime, get_scenario
 from repro.configs import smoke_config
 from repro.core.events import EventKind
-from repro.core.slo import SLOPolicy
-from repro.serving.engine import Engine, EngineConfig, ModelExecutor
-from repro.serving.request import Request
+from repro.serving.engine import ModelExecutor
 
 
 def main():
@@ -33,39 +32,22 @@ def main():
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
-    ecfg = EngineConfig(max_slots=6, max_len=256, prefill_chunk=32,
-                        prefill_slots_per_step=2, scheduler=args.scheduler,
-                        arbiter=args.arbiter, max_tenants=3)
-    eng = Engine(ecfg, executor=ModelExecutor(cfg, ecfg))
+    spec = get_scenario("serve_three_class", scheduler=args.scheduler,
+                        arbiter=args.arbiter, requests=args.requests)
+    rt = ServeRuntime.from_spec(
+        spec, executor=lambda ecfg: ModelExecutor(cfg, ecfg))
+    rep = rt.run(spec).validate()
 
-    eng.create_ectx(0, SLOPolicy(priority=1.0, kv_quota_tokens=256 * 2,
-                                 kernel_cycle_limit=240), name="batch")
-    eng.create_ectx(1, SLOPolicy(priority=1.0, kv_quota_tokens=256 * 2),
-                    name="interactive")
-    eng.create_ectx(2, SLOPolicy(priority=2.0, kv_quota_tokens=256 * 2),
-                    name="premium")
-
-    rng = np.random.RandomState(0)
-    for _ in range(args.requests):
-        eng.submit(Request(0, rng.randint(1, 90, 160).astype(np.int32),
-                           max_new_tokens=48))
-        eng.submit(Request(1, rng.randint(1, 90, 12).astype(np.int32),
-                           max_new_tokens=12))
-        eng.submit(Request(2, rng.randint(1, 90, 12).astype(np.int32),
-                           max_new_tokens=12))
-    eng.run_until_idle()
-
-    m = eng.metrics()
-    print(f"policy: {args.scheduler}+{args.arbiter}   "
-          f"Jain(time-avg)={m['jain_timeavg']:.3f}   "
-          f"steps={m['steps']}")
+    print(f"policy: {rep.scheduler}+{rep.arbiter}   "
+          f"Jain(time-avg)={rep.jain_pu:.3f}   steps={rep.duration:.0f}")
     names = {0: "batch(congestor)", 1: "interactive", 2: "premium(2x)"}
-    for t in sorted(m["tenants"]):
-        d = m["tenants"][t]
-        evs = [e.kind.value for e in eng.poll_events(t)
-               if e.kind != EventKind.ADMITTED]
-        print(f"  {names[t]:18s} done={d['done']:2d} killed={d['killed']} "
-              f"mean_fct={d['mean_fct']:6.1f} steps  events={evs[:3]}")
+    admitted = EventKind.ADMITTED.value
+    for t in sorted(rep.tenants):
+        r = rep.tenants[t]
+        evs = [e["kind"] for e in rep.events
+               if e["tenant"] == t and e["kind"] != admitted]
+        print(f"  {names[t]:18s} done={r.completed:2d} killed={r.killed} "
+              f"mean_fct={r.extra['mean_fct']:6.1f} steps  events={evs[:3]}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,472 @@
+"""The unified OSMOSIS runtime protocol + backend adapters (DESIGN.md §7).
+
+One tenant-facing control-plane surface over both execution substrates:
+
+  * ``SimRuntime``   — wraps the cycle-level PsPIN ``Simulator``; the
+    clock is virtual nanoseconds, work items are ``TracePacket``s.
+  * ``ServeRuntime`` — wraps the TPU serving ``Engine``; the clock is
+    engine steps, work items are ``Request``s.
+
+Both expose the same lifecycle: ``create_tenant``/``destroy_tenant``
+(ECTX + SLOPolicy), ``inject`` (workload), ``attach_controller`` (QoS),
+``run_until`` (clock), ``poll_events`` (EQ), and ``report()`` — a
+schema-identical, JSON-portable ``RunReport``.  ``run(spec)`` drives a
+whole declarative ``ScenarioSpec`` end to end.
+
+The legacy surfaces stay available as deprecation shims: the simulator
+still returns ``SimResult`` (``SimRuntime.result``) and the engine still
+answers ``metrics()`` — new code should consume ``RunReport`` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.api.report import RunReport, TenantReport, _jsonify
+from repro.api.spec import ScenarioSpec, TenantSpec
+from repro.core.events import Event
+from repro.core.slo import ECTX, SLOPolicy
+
+MAX_REPORT_EVENTS = 512   # EQ events embedded per report; rest summarized
+
+
+@runtime_checkable
+class Runtime(Protocol):
+    """The one control-plane surface both backends implement."""
+
+    backend: str                                   # "sim" | "serve"
+    time_unit: str                                 # "ns" | "steps"
+
+    def create_tenant(self, tenant_id: int, slo: SLOPolicy, *,
+                      name: str = "", workload=None) -> ECTX: ...
+    def destroy_tenant(self, tenant_id: int) -> List[Event]: ...
+    def inject(self, work: Sequence) -> None: ...
+    def attach_controller(self, controller) -> None: ...
+    def run_until(self, t: Optional[float] = None) -> float: ...
+    def now(self) -> float: ...
+    def poll_events(self, tenant_id: int) -> List[Event]: ...
+    def report(self, spec: Optional[ScenarioSpec] = None) -> RunReport: ...
+
+
+def _events_block(events: List[Event], extras: dict) -> List[dict]:
+    """Serialize EQ events (bounded; the total count is always recorded)."""
+    extras["events_total"] = len(events)
+    return _jsonify([
+        {"tenant": e.tenant, "kind": e.kind.value, "time": float(e.time),
+         "detail": e.detail} for e in events[:MAX_REPORT_EVENTS]])
+
+
+# ---------------------------------------------------------------------------
+# simulator adapter
+# ---------------------------------------------------------------------------
+class SimRuntime:
+    """Runtime adapter over the cycle-level PsPIN simulator.
+
+    The underlying ``Simulator`` binds its tenant set at construction,
+    so the adapter stages ``create_tenant`` calls and builds the
+    simulator lazily on first ``inject``/``run_until`` (the "seal").
+    ``destroy_tenant`` is not supported on this backend — a sim tenant
+    lives for the whole scenario.
+    """
+
+    backend = "sim"
+    time_unit = "ns"
+
+    def __init__(self, *, scheduler: str = "wlbvt", frag=None,
+                 arb: str = "dwrr", fifo_capacity: int = 4096,
+                 io_demand_weights=None, record_timeline: bool = False,
+                 control_interval_ns: float = 8000.0):
+        self._kw = dict(scheduler=scheduler, frag=frag, arb=arb,
+                        fifo_capacity=fifo_capacity,
+                        io_demand_weights=io_demand_weights,
+                        record_timeline=record_timeline,
+                        control_interval_ns=control_interval_ns)
+        self._tenants: List[ECTX] = []
+        self._controller = None
+        self._sim = None
+        self._events: List[Event] = []
+        self._pending: List = []      # injected, not yet run packets
+        self.result = None            # last SimResult (deprecated surface)
+
+    @classmethod
+    def from_spec(cls, spec: ScenarioSpec) -> "SimRuntime":
+        weights = None
+        if spec.io_demand_weights == "demand":
+            weights = _io_demand(spec)
+        return cls(scheduler=spec.scheduler, frag=spec.frag(),
+                   arb=spec.arbiter, fifo_capacity=spec.fifo_capacity,
+                   io_demand_weights=weights,
+                   record_timeline=spec.record_timeline,
+                   control_interval_ns=(spec.controller.interval_ns
+                                        if spec.controller else 8000.0))
+
+    # -- lifecycle ----------------------------------------------------------
+    def create_tenant(self, tenant_id: int, slo: SLOPolicy, *,
+                      name: str = "", workload=None) -> ECTX:
+        if self._sim is not None:
+            raise RuntimeError("sim backend binds tenants at seal time; "
+                               "create_tenant before the first inject/run")
+        if tenant_id != len(self._tenants):
+            raise ValueError(f"sim tenant ids are dense: expected "
+                             f"{len(self._tenants)}, got {tenant_id}")
+        e = ECTX(tenant_id=tenant_id, name=name or f"tenant{tenant_id}",
+                 slo=slo, kernel=workload)
+        self._tenants.append(e)
+        return e
+
+    def destroy_tenant(self, tenant_id: int) -> List[Event]:
+        raise NotImplementedError(
+            "the cycle simulator has no mid-run tenant teardown; "
+            "use the serve backend for lifecycle churn")
+
+    def attach_controller(self, controller) -> None:
+        if self._sim is not None:
+            raise RuntimeError("attach_controller before the first run")
+        self._controller = controller
+
+    def _seal(self):
+        if self._sim is None:
+            from repro.sim.engine import Simulator
+            if not self._tenants:
+                raise RuntimeError("no tenants created")
+            self._sim = Simulator(self._tenants,
+                                  controller=self._controller, **self._kw)
+        return self._sim
+
+    # -- clock + work -------------------------------------------------------
+    def inject(self, work: Sequence) -> None:
+        self._seal()                  # tenant set is bound from here on
+        self._pending.extend(work)
+
+    def run_until(self, t: Optional[float] = None) -> float:
+        sim = self._seal()
+        pending, self._pending = self._pending, []
+        self.result = sim.run(pending, horizon=t)
+        self._events.extend(self.result.events)
+        return sim.now
+
+    def now(self) -> float:
+        return self._seal().now
+
+    def poll_events(self, tenant_id: int) -> List[Event]:
+        out = [e for e in self._events if e.tenant == tenant_id]
+        self._events = [e for e in self._events if e.tenant != tenant_id]
+        return out
+
+    # -- scenario driver ----------------------------------------------------
+    def run(self, spec: ScenarioSpec) -> RunReport:
+        for i, t in enumerate(spec.tenants):
+            self.create_tenant(i, t.slo(), name=t.name,
+                               workload=t.workload.build())
+        if spec.controller is not None and self._controller is None:
+            from repro.telemetry import QoSController
+            T = len(spec.tenants)
+            self.attach_controller(QoSController(
+                base_weights=np.ones(T),
+                p99_targets=spec.controller.p99_targets(
+                    spec.tenants, "sim", T)))
+        self.inject(build_traces(spec))
+        self.run_until(None)          # drain every queued event
+        return self.report(spec)
+
+    # -- report -------------------------------------------------------------
+    def report(self, spec: Optional[ScenarioSpec] = None) -> RunReport:
+        if self.result is None:
+            self.run_until(None)
+        res = self.result
+        from repro.telemetry import tenant_report
+        from repro.telemetry.metrics import C_IDX
+        snap = res.telemetry.snapshot()
+        tenants: Dict[int, TenantReport] = {}
+        for i, e in enumerate(self._tenants):
+            st = res.stats[i]
+            counts = snap["counts"][i]
+            tenants[i] = TenantReport(
+                tenant_id=i, name=e.name,
+                arrivals=int(counts[C_IDX["arrivals"]]),
+                completed=int(st.completed), killed=int(st.killed),
+                drops=int(st.drops),
+                rejected=int(counts[C_IDX["rejected"]]),
+                ecn_marks=int(counts[C_IDX["ecn_marks"]]),
+                bytes_in=float(counts[C_IDX["bytes_in"]]),
+                bytes_out=float(counts[C_IDX["bytes_out"]]),
+                throughput=float(res.throughput_gbps(i)),
+                p50_latency=float(res.p50(i)),
+                p99_latency=float(res.p99(i)),
+                latency_samples=len(st.kernel_times),
+                extra=_jsonify({
+                    "fct": float(st.fct),
+                    "io_bytes_done": float(st.io_bytes_done),
+                    "served_payload_bytes": float(st.served_payload_bytes),
+                }))
+        extras: dict = {}
+        events = _events_block(self._events, extras)
+        names = {i: e.name for i, e in enumerate(self._tenants)}
+        return RunReport(
+            scenario=spec.name if spec else "",
+            backend="sim", time_unit="ns", duration=float(res.time),
+            scheduler=self._kw["scheduler"], arbiter=self._kw["arb"],
+            seed=int(spec.seed) if spec else 0,
+            jain_pu=float(res.jain_pu_timeavg),
+            jain_io=float(res.jain_io_timeavg),
+            tenants=tenants, events=events,
+            telemetry=_jsonify(tenant_report(res.telemetry, names=names)),
+            spec=_jsonify(spec.to_dict()) if spec else None,
+            extras=_jsonify(extras))
+
+
+def build_traces(spec: ScenarioSpec):
+    """Materialize the per-tenant packet traces a spec describes."""
+    from repro.sim.traffic import make_trace, merge_traces
+    traces = []
+    for i, t in enumerate(spec.tenants):
+        a = t.arrival
+        traces.append(make_trace(
+            i, size=a.size, share=a.share, seed=spec.seed + a.seed_offset,
+            duration_ns=a.duration_frac * spec.duration_us * 1e3))
+    return merge_traces(*traces)
+
+
+def _io_demand(spec: ScenarioSpec) -> List[float]:
+    """Per-tenant IO byte demand (bytes/ns) — the denominator weights of
+    windowed IO fairness under heterogeneous DMA amplification."""
+    from repro.configs.osmosis_pspin import PSPIN
+    link_bns = PSPIN.ingress_gbps / 8.0
+    out = []
+    for t in spec.tenants:
+        wl = t.workload.build()
+        payload = max(1, t.arrival.size - PSPIN.header_bytes)
+        out.append(t.arrival.share * link_bns * wl.io_bytes(payload)
+                   / t.arrival.size)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serving adapter
+# ---------------------------------------------------------------------------
+class ServeRuntime:
+    """Runtime adapter over the multi-tenant TPU serving engine."""
+
+    backend = "serve"
+    time_unit = "steps"
+
+    def __init__(self, ecfg=None, executor=None, **cfg_overrides):
+        """``executor`` is either an executor instance or a factory
+        ``(EngineConfig) -> executor`` — the factory form exists because
+        real executors (``ModelExecutor``) need the very EngineConfig
+        this constructor derives (None = scheduling-only NullExecutor)."""
+        from repro.serving.engine import Engine, EngineConfig
+        if ecfg is None:
+            ecfg = EngineConfig(**cfg_overrides)
+        elif cfg_overrides:
+            ecfg = dataclasses.replace(ecfg, **cfg_overrides)
+        self.ecfg = ecfg
+        if callable(executor) and not hasattr(executor, "decode"):
+            executor = executor(ecfg)
+        self.engine = Engine(ecfg, executor=executor)
+        self._names: Dict[int, str] = {}
+        self._events: List[Event] = []
+
+    @classmethod
+    def from_spec(cls, spec: ScenarioSpec, executor=None,
+                  **cfg_overrides) -> "ServeRuntime":
+        s = spec.serve
+        kw = dict(max_slots=s.max_slots, max_len=s.max_len,
+                  prefill_chunk=s.prefill_chunk,
+                  prefill_slots_per_step=s.prefill_slots_per_step,
+                  kv_overcommit=s.kv_overcommit,
+                  scheduler=spec.scheduler, arbiter=spec.arbiter,
+                  max_tenants=max(len(spec.tenants), 2),
+                  qos_interval=(spec.controller.interval_steps
+                                if spec.controller else 0))
+        kw.update(cfg_overrides)
+        return cls(executor=executor, **kw)
+
+    # -- lifecycle ----------------------------------------------------------
+    def create_tenant(self, tenant_id: int, slo: SLOPolicy, *,
+                      name: str = "", workload=None) -> ECTX:
+        e = self.engine.create_ectx(tenant_id, slo, name=name)
+        self._names[tenant_id] = e.name
+        return e
+
+    def destroy_tenant(self, tenant_id: int) -> List[Event]:
+        evs = self.engine.destroy_ectx(tenant_id)
+        self._events.extend(evs)
+        return evs
+
+    def attach_controller(self, controller) -> None:
+        self.engine.attach_controller(controller)
+
+    # -- clock + work -------------------------------------------------------
+    def inject(self, work: Sequence) -> None:
+        for req in work:
+            self.engine.submit(req)
+
+    def run_until(self, t: Optional[float] = None) -> float:
+        if t is None:
+            self.engine.run_until_idle()
+        else:
+            while self.engine.step_count < t:
+                self.engine.step()
+        return float(self.engine.step_count)
+
+    def now(self) -> float:
+        return float(self.engine.step_count)
+
+    def poll_events(self, tenant_id: int) -> List[Event]:
+        mine = [e for e in self._events if e.tenant == tenant_id]
+        self._events = [e for e in self._events if e.tenant != tenant_id]
+        if tenant_id in self.engine.eq:
+            mine.extend(self.engine.poll_events(tenant_id))
+        return mine
+
+    # -- scenario driver ----------------------------------------------------
+    def run(self, spec: ScenarioSpec) -> RunReport:
+        quota_default = spec.serve.max_len * max(
+            1, spec.serve.max_slots // max(len(spec.tenants), 1))
+        for i, t in enumerate(spec.tenants):
+            slo = t.slo()
+            if slo.kv_quota_tokens == 0:
+                slo = dataclasses.replace(slo, kv_quota_tokens=quota_default)
+            self.create_tenant(i, slo, name=t.name)
+        if spec.controller is not None:
+            from repro.telemetry import QoSController
+            T = self.ecfg.max_tenants
+            self.attach_controller(QoSController(
+                base_weights=np.ones(T),
+                p99_targets=spec.controller.p99_targets(
+                    spec.tenants, "serve", T)))
+        self.inject(build_requests(spec))
+        if spec.serve.steps > 0:
+            self.run_until(spec.serve.steps)
+        else:
+            self.run_until(None)
+        return self.report(spec)
+
+    # -- report -------------------------------------------------------------
+    def report(self, spec: Optional[ScenarioSpec] = None) -> RunReport:
+        eng = self.engine
+        m = eng.metrics()
+        steps = max(eng.step_count, 1)
+        tel = eng.tel
+        if tel is not None:
+            tel.commit()
+            snap = tel.snapshot()
+            from repro.telemetry.metrics import C_IDX, hist_quantile
+            p50 = hist_quantile(snap["hist"], 0.50, np)
+            p99 = hist_quantile(snap["hist"], 0.99, np)
+        # non-destructive (matching SimRuntime.report): poll_events still
+        # delivers these to the tenant afterwards
+        pending = list(self._events)
+        for t in sorted(eng.eq):
+            pending.extend(eng.eq[t].snapshot())
+        tenant_ids = sorted(set(self._names) | set(m["tenants"]))
+        tenants: Dict[int, TenantReport] = {}
+        for t in tenant_ids:
+            d = m["tenants"].get(
+                t, {"done": 0, "killed": 0, "mean_fct": 0.0, "tokens": 0})
+            if tel is not None:
+                counts = snap["counts"][t]
+                row = dict(
+                    arrivals=int(counts[C_IDX["arrivals"]]),
+                    rejected=int(counts[C_IDX["rejected"]]),
+                    ecn_marks=int(counts[C_IDX["ecn_marks"]]),
+                    drops=int(counts[C_IDX["drops"]]),
+                    bytes_in=float(counts[C_IDX["bytes_in"]]),
+                    bytes_out=float(counts[C_IDX["bytes_out"]]),
+                    throughput=float(counts[C_IDX["tokens"]]) / steps,
+                    p50_latency=float(p50[t]), p99_latency=float(p99[t]),
+                    latency_samples=int(snap["hist"][t].sum()))
+            else:
+                row = dict(arrivals=int(d["done"] + d["killed"]),
+                           rejected=0, ecn_marks=0, drops=0,
+                           bytes_in=0.0, bytes_out=0.0,
+                           throughput=float(d["tokens"]) / steps,
+                           p50_latency=0.0, p99_latency=0.0,
+                           latency_samples=0)
+            tenants[t] = TenantReport(
+                tenant_id=t, name=self._names.get(t, f"tenant{t}"),
+                completed=int(d["done"]), killed=int(d["killed"]),
+                extra=_jsonify({"mean_fct": float(d["mean_fct"]),
+                                "tokens": float(d["tokens"])}),
+                **row)
+        extras = {"decode_steps": m["decode_steps"],
+                  "prefill_chunks": m["prefill_chunks"]}
+        events = _events_block(pending, extras)
+        return RunReport(
+            scenario=spec.name if spec else "",
+            backend="serve", time_unit="steps",
+            duration=float(eng.step_count),
+            scheduler=self.ecfg.scheduler, arbiter=self.ecfg.arbiter,
+            seed=int(spec.seed) if spec else 0,
+            jain_pu=float(m["jain_timeavg"]), jain_io=1.0,
+            tenants=tenants, events=events,
+            telemetry=(_jsonify(eng.telemetry_report())
+                       if tel is not None else None),
+            spec=_jsonify(spec.to_dict()) if spec else None,
+            extras=_jsonify(extras))
+
+
+def build_requests(spec: ScenarioSpec):
+    """Materialize the request stream a spec's serving projection
+    describes: round-robin across tenants, one shared RNG (matching the
+    hand-written drivers this replaces)."""
+    from repro.serving.request import Request
+    rng = np.random.RandomState(spec.seed)
+    vocab = spec.serve.vocab
+    out = []
+    rounds = max((t.arrival.requests for t in spec.tenants), default=0)
+    for j in range(rounds):
+        for i, t in enumerate(spec.tenants):
+            if j >= t.arrival.requests:
+                continue
+            a = t.arrival
+            out.append(Request(
+                i, rng.randint(1, vocab, size=a.prompt_len).astype(np.int32),
+                max_new_tokens=a.max_new_tokens))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one-call driver
+# ---------------------------------------------------------------------------
+def make_runtime(spec: ScenarioSpec, backend: str, *, executor=None,
+                 **overrides) -> Runtime:
+    if backend == "sim":
+        return SimRuntime.from_spec(spec)
+    if backend == "serve":
+        return ServeRuntime.from_spec(spec, executor=executor, **overrides)
+    raise ValueError(f"unknown backend {backend!r} (want 'sim' or 'serve')")
+
+
+def run_scenario(spec: ScenarioSpec, backend: str = "sim", *,
+                 executor=None, validate: bool = True) -> RunReport:
+    """Run a declarative scenario on either backend -> ``RunReport``."""
+    if spec.analytic:
+        return _run_analytic(spec)
+    rt = make_runtime(spec, backend, executor=executor)
+    rep = rt.run(spec)
+    return rep.validate() if validate else rep
+
+
+def _run_analytic(spec: ScenarioSpec) -> RunReport:
+    """Closed-form scenarios (no event loop): currently ``ppb`` — the
+    paper's Fig. 3 service-time-vs-budget classification."""
+    if spec.analytic != "ppb":
+        raise ValueError(f"unknown analytic scenario {spec.analytic!r}")
+    from repro.sim.scenarios import service_time_vs_ppb
+    sizes = [64, 128, 256, 512, 1024, 2048, 4096]
+    table = service_time_vs_ppb(sizes)
+    rows = [[w, int(p), float(svc), float(budget), int(svc <= budget)]
+            for w, lst in table.items() for (p, svc, budget) in lst]
+    return RunReport(
+        scenario=spec.name, backend="sim", time_unit="ns", duration=0.0,
+        scheduler=spec.scheduler, arbiter=spec.arbiter, seed=spec.seed,
+        jain_pu=1.0, jain_io=1.0, tenants={}, events=[],
+        telemetry=None, spec=_jsonify(spec.to_dict()),
+        extras=_jsonify({"analytic": "ppb",
+                         "columns": ["workload", "pkt_bytes", "service_ns",
+                                     "ppb_ns", "fits"],
+                         "table": rows})).validate()

@@ -51,5 +51,10 @@ class EventQueue:
         self._q.clear()
         return out
 
+    def snapshot(self) -> List[Event]:
+        """Non-destructive view of the queued events (reports use this
+        so ``poll``/``drain`` still deliver them to the tenant)."""
+        return list(self._q)
+
     def __len__(self) -> int:
         return len(self._q)

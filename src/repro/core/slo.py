@@ -22,8 +22,16 @@ class SLOPolicy:
     max_chunk_tokens: int = 0        # fragmentation grain override
 
     def __post_init__(self):
-        if self.priority <= 0:
-            raise ValueError("priority must be positive")
+        for knob in ("priority", "dma_priority", "egress_priority"):
+            if getattr(self, knob) <= 0:
+                raise ValueError(f"{knob} must be positive, got "
+                                 f"{getattr(self, knob)}")
+        for limit in ("kernel_cycle_limit", "total_cycle_limit",
+                      "memory_bytes", "kv_quota_tokens",
+                      "max_chunk_tokens"):
+            if getattr(self, limit) < 0:
+                raise ValueError(f"{limit} must be >= 0 (0 = unlimited/"
+                                 f"default), got {getattr(self, limit)}")
 
 
 @dataclasses.dataclass

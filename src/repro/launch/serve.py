@@ -3,22 +3,26 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
         --tenants 3 --requests 12 --scheduler wlbvt
 
-Spins up the engine, admits tenants with different SLO priorities, feeds a
-mixed workload (long-prompt congestor + short-prompt victims) and prints
-per-tenant FCT + Jain fairness — the serving analogue of paper Figs. 12-13.
+Runs a registered serving ScenarioSpec (default ``serve_mixed_slo``:
+a 2x-priority tenant, a long-prompt congestor, interactive victims)
+through the unified runtime API over a real model executor, and prints
+the portable RunReport — the serving analogue of paper Figs. 12-13.
+
+    --scenario serve_three_class   # any registered serve-backend scenario
+    --json report.json             # dump the RunReport
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-import numpy as np
-
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--scenario", default="serve_mixed_slo",
+                    help="registered serving scenario to run")
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--scheduler", default="wlbvt",
@@ -28,49 +32,54 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="",
+                    help="dump the RunReport JSON to this path")
     ap.add_argument("--telemetry-report", action="store_true",
                     help="print the per-tenant telemetry plane report")
     args = ap.parse_args(argv)
 
+    from repro.api import ServeRuntime, get_scenario
+    from repro.api.registry import scenario_params
     from repro.configs import get_config, smoke_config
-    from repro.core.slo import SLOPolicy
-    from repro.serving.engine import Engine, EngineConfig, ModelExecutor
-    from repro.serving.request import Request
+    from repro.serving.engine import ModelExecutor
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    ecfg = EngineConfig(max_slots=args.max_slots, max_len=args.max_len,
-                        prefill_chunk=args.prefill_chunk,
-                        scheduler=args.scheduler, arbiter=args.arbiter,
-                        max_tenants=max(args.tenants, 2))
-    exe = ModelExecutor(cfg, ecfg, rng_seed=args.seed)
-    eng = Engine(ecfg, executor=exe)
+    # forward each driver knob only if the scenario's factory takes it;
+    # warn when an explicitly-set flag has no effect on this scenario
+    knobs = dict(scheduler=args.scheduler, arbiter=args.arbiter,
+                 seed=args.seed, tenants=args.tenants,
+                 requests=args.requests, max_slots=args.max_slots,
+                 max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+                 vocab=cfg.vocab_size)
+    accepted = scenario_params(args.scenario)
+    params = {k: v for k, v in knobs.items() if k in accepted}
+    for k in sorted(set(knobs) - accepted - {"vocab"}):
+        if getattr(args, k) != ap.get_default(k):
+            print(f"warning: --{k.replace('_', '-')} is ignored by "
+                  f"scenario {args.scenario!r}")
+    spec = get_scenario(args.scenario, **params)
+    if "serve" not in spec.backends:
+        raise SystemExit(f"scenario {args.scenario!r} has no serving "
+                         f"projection (backends: {spec.backends})")
 
-    rng = np.random.RandomState(args.seed)
-    quota = args.max_len * max(2, args.max_slots // args.tenants)
-    for t in range(args.tenants):
-        prio = 2.0 if t == 0 else 1.0
-        eng.create_ectx(t, SLOPolicy(priority=prio, kv_quota_tokens=quota),
-                        name=f"tenant{t}")
-    for i in range(args.requests):
-        t = i % args.tenants
-        # tenant 1 is the congestor: long prompts + long generations
-        plen = args.max_len // 2 if t == 1 else 8
-        new = 32 if t == 1 else 8
-        prompt = rng.randint(1, cfg.vocab_size, size=plen).astype(np.int32)
-        eng.submit(Request(t, prompt, max_new_tokens=new))
+    rt = ServeRuntime.from_spec(
+        spec, executor=lambda ecfg: ModelExecutor(cfg, ecfg,
+                                                  rng_seed=args.seed))
+    rep = rt.run(spec).validate()
 
-    eng.run_until_idle()
-    m = eng.metrics()
-    print(f"steps={m['steps']}  Jain(time-avg)={m['jain_timeavg']:.3f}  "
-          f"prefill_chunks={m['prefill_chunks']}  "
-          f"decode_steps={m['decode_steps']}")
-    for t in sorted(m["tenants"]):
-        d = m["tenants"][t]
-        print(f"  tenant{t}: done={d['done']} killed={d['killed']} "
-              f"mean_fct={d['mean_fct']:.1f} steps")
+    print(rep.summary())
+    print(f"  prefill_chunks={rep.extras['prefill_chunks']}  "
+          f"decode_steps={rep.extras['decode_steps']}")
+    for t in sorted(rep.tenants):
+        r = rep.tenants[t]
+        print(f"  {r.name}: done={r.completed} killed={r.killed} "
+              f"mean_fct={r.extra['mean_fct']:.1f} steps")
+    if args.json:
+        rep.save(args.json)
+        print(f"wrote {args.json}")
     if args.telemetry_report:
         from repro.telemetry import format_console
-        print(format_console(eng.telemetry_report()))
+        print(format_console(rt.engine.telemetry_report()))
     return 0
 
 

@@ -500,6 +500,12 @@ class Engine:
 
     # ------------------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
+        """Untyped engine counters.
+
+        Deprecated as a public surface: external consumers should run
+        through ``repro.api`` (``ServeRuntime``/``run_scenario``) and
+        consume the schema-validated ``RunReport`` instead (DESIGN.md
+        §7)."""
         per_tenant: Dict[int, Dict[str, float]] = {}
         for r in self.done:
             d = per_tenant.setdefault(r.tenant_id, {

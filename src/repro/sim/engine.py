@@ -52,6 +52,12 @@ class TenantStats:
 
 @dataclasses.dataclass
 class SimResult:
+    """Backend-native result bundle.
+
+    Deprecated as a public surface: external consumers should run
+    through ``repro.api`` (``SimRuntime``/``run_scenario``) and consume
+    the portable, backend-neutral ``RunReport`` instead (DESIGN.md §7).
+    """
     time: float
     stats: Dict[int, TenantStats]
     jain_pu_timeavg: float

@@ -1,18 +1,24 @@
-"""Scenario builders for the paper's experiments (§3, §7.3, §7.4) plus
-the telemetry-plane closed-loop QoS scenario (DESIGN.md §6)."""
+"""Legacy scenario entry points — thin shims over the unified runtime API.
+
+Every scenario here is now a registered declarative ``ScenarioSpec`` in
+``repro.api.scenarios``; these functions survive as deprecation shims
+that build the spec and run it through ``SimRuntime``, returning the
+backend-native ``SimResult`` the old callers consume.  New code should
+use the API directly:
+
+    from repro.api import get_scenario, run_scenario
+    report = run_scenario(get_scenario("fig9_congestor_victim"), "sim")
+
+or the CLI: ``python -m repro.launch.scenario <name> --backend sim``.
+"""
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.configs.osmosis_pspin import PSPIN
 from repro.core import ECTX, FragmentationPolicy, SLOPolicy
-from repro.sim.engine import SimResult, Simulator
-from repro.sim.traffic import equal_share_traces, make_trace, merge_traces
-from repro.sim.workloads import (WORKLOADS, WorkloadModel, ppb,
-                                 spin_workload)
-from repro.telemetry import QoSController
+from repro.sim.engine import SimResult
+from repro.sim.workloads import WORKLOADS, WorkloadModel, ppb
 
 
 def make_tenants(kernels: List[WorkloadModel],
@@ -27,62 +33,48 @@ def make_tenants(kernels: List[WorkloadModel],
     return out
 
 
+def _run_sim(spec) -> SimResult:
+    """Run a spec on the sim backend, returning the legacy SimResult."""
+    from repro.api.runtime import SimRuntime
+    rt = SimRuntime.from_spec(spec)
+    rt.run(spec)
+    return rt.result
+
+
 def run_congestor_victim_compute(scheduler: str, *, cpb_victim: float = 0.6,
                                  cpb_ratio: float = 2.0,
                                  duration_us: float = 300.0,
                                  pkt_size: int = 512, seed: int = 0
                                  ) -> SimResult:
-    """Paper Figs. 4 & 9: two compute-bound spin tenants, the Congestor with
-    `cpb_ratio`x the compute cost per byte."""
-    victim = spin_workload("victim", cpb_victim)
-    congestor = spin_workload("congestor", cpb_victim * cpb_ratio)
-    tenants = make_tenants([congestor, victim])
-    trace = equal_share_traces(2, sizes=[pkt_size, pkt_size],
-                               duration_ns=duration_us * 1e3, seed=seed)
-    sim = Simulator(tenants, scheduler=scheduler, record_timeline=True)
-    return sim.run(trace)
+    """Paper Figs. 4 & 9 (shim over ``fig9_congestor_victim``)."""
+    from repro.api import get_scenario
+    return _run_sim(get_scenario(
+        "fig9_congestor_victim", scheduler=scheduler, cpb_victim=cpb_victim,
+        cpb_ratio=cpb_ratio, duration_us=duration_us, pkt_size=pkt_size,
+        seed=seed))
 
 
 def run_hol_blocking(frag: FragmentationPolicy, *, congestor_size: int = 4096,
                      victim_size: int = 64, duration_us: float = 150.0,
                      scheduler: str = "wlbvt", arb: str = "dwrr",
                      seed: int = 0) -> SimResult:
-    """Paper Figs. 5 & 10: storage-read pattern — small request packets
-    trigger large blocking egress transfers (paper §5.1 step 5: "kernels
-    can pipeline large storage reads").  The congestor's PUs hold up to
-    pu_limit concurrent `congestor_size` transfers, so under FIFO (no-QoS)
-    arbitration the victim's 64B transfer waits behind the whole in-flight
-    burst; DWRR + fragmentation bounds that wait to ~one fragment."""
-    victim = WorkloadModel("victim_io", 40, 0.02, io_kind="egress",
-                           io_fixed_bytes=victim_size)
-    congestor = WorkloadModel("congestor_io", 40, 0.02, io_kind="egress",
-                              io_fixed_bytes=congestor_size)
-    tenants = make_tenants([congestor, victim])
-    trace = merge_traces(
-        # congestor: enough 512B requests to keep its PU share saturated
-        make_trace(0, size=512, share=0.50, seed=seed,
-                   duration_ns=duration_us * 1e3),
-        # victim: latency probe at modest rate
-        make_trace(1, size=64, share=0.02, seed=seed + 1,
-                   duration_ns=duration_us * 1e3))
-    sim = Simulator(tenants, scheduler=scheduler, frag=frag, arb=arb)
-    return sim.run(trace)
+    """Paper Figs. 5 & 10 (shim over ``fig10_hol_blocking``)."""
+    from repro.api import get_scenario
+    return _run_sim(get_scenario(
+        "fig10_hol_blocking", frag_mode=frag.mode,
+        frag_bytes=frag.fragment_bytes, congestor_size=congestor_size,
+        victim_size=victim_size, duration_us=duration_us,
+        scheduler=scheduler, arb=arb, seed=seed))
 
 
 def run_standalone(workload_name: str, *, pkt_size: int,
                    duration_us: float = 100.0,
                    osmosis: bool = True, seed: int = 0) -> SimResult:
-    """Paper Fig. 11: single tenant; OSMOSIS (WLBVT + hw frag) vs the
-    reference PsPIN (RR, no fragmentation)."""
-    wl = WORKLOADS[workload_name]
-    tenants = make_tenants([wl])
-    trace = make_trace(0, size=pkt_size, link_gbps=PSPIN.ingress_gbps,
-                       duration_ns=duration_us * 1e3, seed=seed)
-    frag = (FragmentationPolicy(mode="hardware", fragment_bytes=512)
-            if osmosis else FragmentationPolicy(mode="off"))
-    sim = Simulator(tenants, scheduler="wlbvt" if osmosis else "rr",
-                    frag=frag, arb="dwrr" if osmosis else "fifo")
-    return sim.run(trace)
+    """Paper Fig. 11 (shim over ``fig11_standalone``)."""
+    from repro.api import get_scenario
+    return _run_sim(get_scenario(
+        "fig11_standalone", workload=workload_name, pkt_size=pkt_size,
+        duration_us=duration_us, osmosis=osmosis, seed=seed))
 
 
 def run_qos_closed_loop(controller: bool = True, *,
@@ -90,132 +82,39 @@ def run_qos_closed_loop(controller: bool = True, *,
                         duration_us: float = 300.0,
                         control_interval_ns: float = 8000.0,
                         seed: int = 0) -> SimResult:
-    """Closed-loop QoS (DESIGN.md §6): a latency-SLO victim whose PU
-    demand (~17 of 32 PUs) slightly exceeds its static equal-weight share
-    (16), against a heavy congestor (~25 PUs demand).
-
-    With static weights the victim's backlog — and so its p99 sojourn
-    latency — grows without bound for the whole run.  With the
-    ``QoSController`` the telemetry plane's interval p99 signal drives
-    AIMD weight boosts until the victim's WLBVT cap covers its demand,
-    then decays the boost back; the victim's p99 stabilizes near its
-    target while weighted fairness (normalized by the *current* weights)
-    stays ~1.
-    """
-    victim = spin_workload("victim", 2.0)
-    congestor = spin_workload("congestor", 2.0)
-    tenants = make_tenants([congestor, victim])
-    trace = merge_traces(
-        # congestor: 1024B packets, ~25 PUs of demand
-        make_trace(0, size=1024, share=0.25, seed=seed,
-                   duration_ns=duration_us * 1e3),
-        # victim: 256B latency probes, ~17 PUs of demand (cap is 16)
-        make_trace(1, size=256, share=0.175, seed=seed + 1,
-                   duration_ns=duration_us * 1e3))
-    ctrl = None
-    if controller:
-        ctrl = QoSController(base_weights=np.ones(2),
-                             p99_targets=[0.0, p99_target_ns])
-    sim = Simulator(tenants, scheduler="wlbvt", controller=ctrl,
-                    control_interval_ns=control_interval_ns)
-    return sim.run(trace)
-
-
-def _pu_share(wl: WorkloadModel, size: int, target_pus: float) -> float:
-    """Ingress link share at which tenant demands `target_pus` PU-cycles/ns."""
-    payload = max(1, size - PSPIN.header_bytes)
-    cyc = wl.compute_cycles(payload)
-    bytes_per_ns_full = PSPIN.ingress_gbps / 8.0
-    return target_pus * size / (bytes_per_ns_full * cyc)
-
-
-def _io_share(wl: WorkloadModel, size: int, target_bytes_per_ns: float) -> float:
-    payload = max(1, size - PSPIN.header_bytes)
-    io_b = max(1, wl.io_bytes(payload))
-    bytes_per_ns_full = PSPIN.ingress_gbps / 8.0
-    return target_bytes_per_ns * size / (bytes_per_ns_full * io_b)
+    """Closed-loop QoS, DESIGN.md §6 (shim over ``qos_closed_loop``)."""
+    from repro.api import get_scenario
+    return _run_sim(get_scenario(
+        "qos_closed_loop", controller=controller,
+        p99_target_ns=p99_target_ns, duration_us=duration_us,
+        control_interval_ns=control_interval_ns, seed=seed))
 
 
 def run_compute_mixture(scheduler: str, *, duration_us: float = 200.0,
                         seed: int = 0) -> SimResult:
-    """Paper Fig. 12: Reduce + Histogram, each as Victim (64-128B pkts)
-    and Congestor (3-4KB pkts).  The paper's traces "saturate the PUs
-    within the first couple thousand cycles": we model that burst regime
-    with ingress shares summing to ~1.3x (FIFOs draining a burst), which
-    keeps every tenant backlogged.  Small packets cost more PU cycles per
-    byte (handler base cost amortizes poorly), so under RR — which grants
-    per *packet* — the congestors' ~2.5k-cycle kernels monopolize the PUs
-    and the victims starve; WLBVT equalizes priority-normalized PU time.
-    """
-    ks = [WORKLOADS["reduce"], WORKLOADS["reduce"],
-          WORKLOADS["histogram"], WORKLOADS["histogram"]]
-    sizes = [64, 4096, 96, 3584]
-    shares = [0.30, 0.35, 0.30, 0.35]
-    tenants = make_tenants(ks)
-    for t, name in zip(tenants, ["reduce_victim", "reduce_congestor",
-                                 "hist_victim", "hist_congestor"]):
-        t.name = name
-    traces = [make_trace(i, size=sizes[i], seed=seed + i, share=shares[i],
-                         duration_ns=duration_us * 1e3)
-              for i in range(4)]
-    sim = Simulator(tenants, scheduler=scheduler,
-                    frag=FragmentationPolicy(mode="hardware",
-                                             fragment_bytes=512),
-                    fifo_capacity=1 << 17, record_timeline=True)
-    return sim.run(merge_traces(*traces))
+    """Paper Fig. 12 (shim over ``fig12_compute_mixture``)."""
+    from repro.api import get_scenario
+    return _run_sim(get_scenario(
+        "fig12_compute_mixture", scheduler=scheduler,
+        duration_us=duration_us, seed=seed))
 
 
 def run_io_mixture(scheduler: str, *, frag: Optional[FragmentationPolicy]
                    = None, duration_us: float = 200.0,
                    seed: int = 0) -> SimResult:
-    """Paper Fig. 13/14: storage data-path offload mixture.  Read/write
-    victims issue small (64B) DMA ops; read/write congestors are
-    storage-RPC kernels (512B requests each triggering a 4 KiB DMA,
-    paper §7.4 "storage RPCs and TCP segment delivery"), sized so combined
-    DMA demand is ~1.1x the AXI.  Under the reference (RR + FIFO bus, no
-    fragmentation) victims are HoL-blocked behind the congestors' in-flight
-    4 KiB bursts; OSMOSIS (WLBVT + DWRR + hw fragmentation) bounds victim
-    latency at ~one fragment while preserving congestor byte throughput."""
-    read_v = WorkloadModel("read_victim", 40, 0.02, io_kind="dma_read",
-                           io_fixed_bytes=64)
-    read_c = WorkloadModel("read_congestor", 40, 0.02, io_kind="dma_read",
-                           io_fixed_bytes=4096)
-    write_v = WorkloadModel("write_victim", 40, 0.02, io_kind="dma_write",
-                            io_fixed_bytes=64)
-    write_c = WorkloadModel("write_congestor", 40, 0.02, io_kind="dma_write",
-                            io_fixed_bytes=4096)
-    ks = [read_v, read_c, write_v, write_c]
-    tenants = make_tenants(ks)
-    for t, k in zip(tenants, ks):
-        t.name = k.name
-    # equal ingress shares; the congestors' 8x DMA amplification (512B
-    # request -> 4 KiB transfer) pushes combined AXI demand to ~1.4x the
-    # bus, and their *blocking* IO holds PUs during transfers — under
-    # RR+FIFO that starves the victims of both PUs and bus slots
-    shares = [0.10, 0.10, 0.10, 0.10]
-    sizes = [64, 512, 64, 512]
-    # victims are finite bursts (first 60%); congestors span the full run,
-    # regaining exclusive bandwidth after victims drain (paper Fig. 13)
-    durs = [0.6, 1.0, 0.6, 1.0]
-    traces = [make_trace(i, size=sizes[i], share=shares[i], seed=seed + i,
-                         duration_ns=durs[i] * duration_us * 1e3)
-              for i in range(4)]
-    link_bns = PSPIN.ingress_gbps / 8.0
-    demand = [shares[i] * link_bns * ks[i].io_fixed_bytes / sizes[i]
-              for i in range(4)]
-    osmosis = scheduler == "wlbvt"
-    if frag is None:
-        frag = (FragmentationPolicy(mode="hardware", fragment_bytes=1024)
-                if osmosis else FragmentationPolicy(mode="off"))
-    sim = Simulator(tenants, scheduler=scheduler, frag=frag,
-                    arb="dwrr" if osmosis else "fifo",
-                    io_demand_weights=demand,
-                    fifo_capacity=1 << 15, record_timeline=True)
-    return sim.run(merge_traces(*traces))
+    """Paper Figs. 13/14 (shim over ``fig13_io_mixture``)."""
+    from repro.api import get_scenario
+    kw = {}
+    if frag is not None:
+        kw = {"frag_mode": frag.mode, "frag_bytes": frag.fragment_bytes}
+    return _run_sim(get_scenario(
+        "fig13_io_mixture", scheduler=scheduler, duration_us=duration_us,
+        seed=seed, **kw))
 
 
 def service_time_vs_ppb(pkt_sizes: List[int]) -> Dict[str, List[Tuple[int, float, float]]]:
-    """Paper Fig. 3: per-workload single-packet service time vs PPB."""
+    """Paper Fig. 3: per-workload single-packet service time vs PPB
+    (analytic; also exposed as the ``ppb_service_time`` scenario)."""
     out: Dict[str, List[Tuple[int, float, float]]] = {}
     for name, wl in WORKLOADS.items():
         rows = []

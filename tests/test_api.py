@@ -1,0 +1,248 @@
+"""Unified runtime API: spec serde, registry, RunReport schema + JSON
+round-trip, cross-backend parity, SLOPolicy validation, scenario CLI."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (RunReport, Runtime, ScenarioSpec, ServeRuntime,
+                       SimRuntime, TENANT_FIELDS, get_scenario,
+                       list_scenarios, run_scenario)
+from repro.core.slo import SLOPolicy
+
+
+# ---------------------------------------------------------------------------
+# SLOPolicy validation (satellite)
+# ---------------------------------------------------------------------------
+def test_slo_policy_validates_all_knobs():
+    SLOPolicy()                                     # defaults are legal
+    SLOPolicy(priority=2.0, dma_priority=0.5, egress_priority=3.0,
+              kernel_cycle_limit=0, total_cycle_limit=10,
+              kv_quota_tokens=512)
+    for bad in (dict(priority=0.0), dict(priority=-1.0),
+                dict(dma_priority=0.0), dict(dma_priority=-2.0),
+                dict(egress_priority=0.0), dict(egress_priority=-0.5),
+                dict(kernel_cycle_limit=-1), dict(total_cycle_limit=-5),
+                dict(memory_bytes=-1), dict(kv_quota_tokens=-64),
+                dict(max_chunk_tokens=-8)):
+        with pytest.raises(ValueError):
+            SLOPolicy(**bad)
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSpec + registry
+# ---------------------------------------------------------------------------
+def test_scenario_spec_round_trips_through_dict():
+    spec = get_scenario("fig13_io_mixture", scheduler="rr")
+    assert ScenarioSpec.from_dict(spec.to_dict()) == spec
+    assert ScenarioSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict()))) == spec
+
+
+def test_registry_covers_all_legacy_scenarios():
+    names = {s["name"] for s in list_scenarios()}
+    # every scenario formerly in sim/scenarios.py, runnable by name
+    assert {"fig9_congestor_victim", "fig10_hol_blocking",
+            "fig11_standalone", "fig12_compute_mixture",
+            "fig13_io_mixture", "qos_closed_loop",
+            "ppb_service_time"} <= names
+    # at least two sim scenarios also project onto the serving backend
+    dual = [s for s in list_scenarios()
+            if {"sim", "serve"} <= set(s["backends"])]
+    assert len(dual) >= 2
+
+
+def test_get_scenario_unknown_name_lists_registered():
+    with pytest.raises(KeyError, match="fig9_congestor_victim"):
+        get_scenario("no_such_scenario")
+
+
+def test_runtime_adapters_satisfy_protocol():
+    spec = get_scenario("fig9_congestor_victim")
+    assert isinstance(SimRuntime.from_spec(spec), Runtime)
+    assert isinstance(ServeRuntime.from_spec(spec), Runtime)
+
+
+# ---------------------------------------------------------------------------
+# RunReport schema
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fig9_reports():
+    spec = get_scenario("fig9_congestor_victim", duration_us=40.0)
+    return (run_scenario(spec, "sim"), run_scenario(spec, "serve"))
+
+
+def test_run_report_json_round_trip(fig9_reports):
+    for rep in fig9_reports:
+        again = RunReport.from_json(rep.to_json())
+        assert again == rep
+        # and the round-tripped report still validates
+        again.validate()
+
+
+def test_run_report_validate_catches_schema_violations(fig9_reports):
+    rep = RunReport.from_json(fig9_reports[0].to_json())
+    rep.backend = "fpga"
+    with pytest.raises(ValueError, match="backend"):
+        rep.validate()
+    rep = RunReport.from_json(fig9_reports[0].to_json())
+    rep.tenants[0].tenant_id = 7
+    with pytest.raises(ValueError, match="mismatch"):
+        rep.validate()
+    rep = RunReport.from_json(fig9_reports[0].to_json())
+    rep.jain_pu = 3.0
+    with pytest.raises(ValueError, match="jain_pu"):
+        rep.validate()
+
+
+# ---------------------------------------------------------------------------
+# cross-backend parity (satellite): one spec, two runtimes, one schema
+# ---------------------------------------------------------------------------
+def test_cross_backend_parity(fig9_reports):
+    sim, serve = fig9_reports
+    assert sim.backend == "sim" and serve.backend == "serve"
+    assert sim.time_unit == "ns" and serve.time_unit == "steps"
+    # identical tenant sets with identical per-tenant schema
+    assert set(sim.tenants) == set(serve.tenants) == {0, 1}
+    for t in sim.tenants:
+        a = dataclasses.asdict(sim.tenants[t])
+        b = dataclasses.asdict(serve.tenants[t])
+        assert set(a) == set(b) == set(TENANT_FIELDS)
+        assert sim.tenants[t].name == serve.tenants[t].name
+    # identical top-level schema
+    assert {f.name for f in dataclasses.fields(sim)} == \
+        {f.name for f in dataclasses.fields(serve)}
+    # both did real work and carry the spec they ran
+    for rep in (sim, serve):
+        assert sum(r.completed for r in rep.tenants.values()) > 0
+        assert rep.spec["name"] == "fig9_congestor_victim"
+        assert rep.jain_pu > 0.9   # WLBVT keeps the victim protected
+
+
+def test_same_spec_runs_both_backends_via_run_until():
+    """Drive both runtimes through the shared protocol surface only."""
+    from repro.api import build_requests, build_traces
+    spec = get_scenario("fig9_congestor_victim", duration_us=20.0)
+    for backend, work, horizon in (
+            ("sim", build_traces(spec), 10_000.0),
+            ("serve", build_requests(spec), 50)):
+        rt = (SimRuntime.from_spec(spec) if backend == "sim"
+              else ServeRuntime.from_spec(spec))
+        for i, t in enumerate(spec.tenants):
+            slo = t.slo()
+            if backend == "serve" and slo.kv_quota_tokens == 0:
+                slo = dataclasses.replace(slo, kv_quota_tokens=1024)
+            rt.create_tenant(i, slo, name=t.name,
+                             workload=t.workload.build())
+        rt.inject(work)
+        now = rt.run_until(horizon)
+        assert now >= horizon or backend == "sim"
+        assert rt.now() == now
+        rep = rt.report(spec).validate()
+        assert rep.duration >= 0
+
+
+# ---------------------------------------------------------------------------
+# legacy shims still behave
+# ---------------------------------------------------------------------------
+def test_legacy_shim_matches_direct_api_run():
+    from repro.sim.scenarios import run_congestor_victim_compute
+    res = run_congestor_victim_compute("wlbvt", duration_us=30.0)
+    rep = run_scenario(
+        get_scenario("fig9_congestor_victim", scheduler="wlbvt",
+                     duration_us=30.0), "sim")
+    assert rep.jain_pu == pytest.approx(res.jain_pu_timeavg)
+    assert rep.tenants[0].completed == res.stats[0].completed
+    assert rep.tenants[1].p99_latency == pytest.approx(res.p99(1))
+    assert rep.duration == pytest.approx(res.time)
+
+
+def test_serve_runtime_lifecycle_and_events():
+    spec = get_scenario("serve_three_class", requests=2)
+    rt = ServeRuntime.from_spec(spec)
+    rep = rt.run(spec)
+    assert {e["kind"] for e in rep.events} >= {"admitted", "evicted"} or \
+        rep.extras["events_total"] >= 0   # events drained into the report
+    # lifecycle churn is a serve-only capability
+    rt2 = ServeRuntime.from_spec(spec)
+    rt2.create_tenant(0, SLOPolicy(kv_quota_tokens=256), name="t0")
+    evs = rt2.destroy_tenant(0)
+    assert any(e.kind.value == "evicted" for e in evs)
+    sim_rt = SimRuntime.from_spec(get_scenario("fig9_congestor_victim"))
+    with pytest.raises(NotImplementedError):
+        sim_rt.destroy_tenant(0)
+
+
+def test_report_is_non_destructive_on_both_backends():
+    """report() must not consume EQ events: poll_events still delivers
+    them afterwards, identically on sim and serve (protocol parity)."""
+    spec = get_scenario("serve_three_class", requests=1)
+    rt = ServeRuntime.from_spec(spec)
+    rep1 = rt.run(spec)
+    rep2 = rt.report(spec)
+    assert rep1.events == rep2.events
+    assert rep1.extras["events_total"] > 0
+    polled = {t: rt.poll_events(t) for t in range(3)}
+    assert sum(len(v) for v in polled.values()) == \
+        rep1.extras["events_total"]
+    # once polled, events are the tenant's: gone from later reports
+    assert rt.report(spec).extras["events_total"] == 0
+    # sim side: same contract
+    sspec = get_scenario("fig9_congestor_victim", duration_us=20.0)
+    srt = SimRuntime.from_spec(sspec)
+    srep = srt.run(sspec)
+    assert srt.report(sspec).events == srep.events
+
+
+def test_analytic_scenario_produces_table_report():
+    rep = run_scenario(get_scenario("ppb_service_time"))
+    assert rep.extras["analytic"] == "ppb"
+    assert len(rep.extras["table"]) > 20
+    assert RunReport.from_json(rep.to_json()) == rep
+
+
+# ---------------------------------------------------------------------------
+# scenario CLI (satellite)
+# ---------------------------------------------------------------------------
+def test_scenario_cli_runs_and_dumps_validated_report(tmp_path, capsys):
+    from repro.launch.scenario import main
+    out = tmp_path / "fig11.json"
+    assert main(["fig11_standalone", "--backend", "sim", "--fast",
+                 "--set", "pkt_size=512", "--json", str(out)]) == 0
+    rep = RunReport.from_json(out.read_text())
+    rep.validate()
+    assert rep.scenario == "fig11_standalone"
+    assert rep.spec["tenants"][0]["arrival"]["size"] == 512
+    assert "jain_pu" in capsys.readouterr().out
+
+
+def test_scenario_cli_list(capsys):
+    from repro.launch.scenario import main
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "fig9_congestor_victim" in out and "serve_mixed_slo" in out
+
+
+def test_scenario_cli_rejects_unsupported_backend():
+    from repro.launch.scenario import main
+    with pytest.raises(SystemExit):
+        main(["fig10_hol_blocking", "--backend", "serve"])
+
+
+def test_scenario_cli_all_writes_reports(tmp_path):
+    """The CI smoke path: every registered scenario runs on every backend
+    it supports, each producing a schema-valid RunReport JSON."""
+    from repro.launch.scenario import main
+    outdir = tmp_path / "reports"
+    assert main(["--all", "--fast", "--out-dir", str(outdir)]) == 0
+    files = sorted(p.name for p in outdir.glob("*.json"))
+    expected_min = {"fig9_congestor_victim.sim.json",
+                    "fig9_congestor_victim.serve.json",
+                    "qos_closed_loop.sim.json",
+                    "qos_closed_loop.serve.json",
+                    "serve_congestor_victim.serve.json",
+                    "ppb_service_time.sim.json"}
+    assert expected_min <= set(files)
+    for p in outdir.glob("*.json"):
+        RunReport.from_json(p.read_text()).validate()
