@@ -22,11 +22,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (paper_figs, sched_cost, serving_fairness,
-                            telemetry_overhead)
+                            sim_throughput, telemetry_overhead)
     suite = dict(paper_figs.ALL)
     suite["sched_cost"] = sched_cost.run
     suite["serving_fairness"] = serving_fairness.run
     suite["telemetry_overhead"] = telemetry_overhead.run
+    suite["sim_throughput"] = sim_throughput.run
 
     names = [args.only] if args.only else list(suite)
     headlines = {}

@@ -1,0 +1,140 @@
+"""Simulator packet throughput: event-loop vs array-batched data plane.
+
+Measures packets/second of the two simulator datapaths (DESIGN.md §8) on
+the fig9-style congestor/victim flood — one fast victim colocated with
+spin congestors that burn their watchdog budget while the fully-utilized
+400G link floods every FMQ — at T ∈ {4, 32, 128}.  Both paths process
+the identical trace to the same fixed horizon and make bit-identical
+scheduling decisions (pinned by the golden-trace and property tests);
+only the wall-clock differs.
+
+    PYTHONPATH=src python -m benchmarks.sim_throughput [--smoke]
+
+``--smoke`` runs the reduced T=32 row only and exits nonzero if the
+batched path is below the 5x perf guard (CI gate: the fast path must
+not silently rot).  The full run records the ≥10x T=32 headline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+GUARD_SPEEDUP_T32 = 5.0          # CI smoke gate
+TENANT_COUNTS = (4, 32, 128)
+
+
+def _tenants(T: int):
+    """Fig9-style fleet: one fast victim per 32 tenants, the rest spin
+    congestors killed at their 50k-cycle watchdog budget (§7.3)."""
+    from repro.core import ECTX, SLOPolicy
+    from repro.sim.workloads import spin_workload
+    out = []
+    for i in range(T):
+        if i % 32 == 0:
+            wl, limit = spin_workload("victim", 0.6), 0
+        else:
+            wl, limit = spin_workload(f"congestor{i}", 200.0), 50000
+        out.append(ECTX(tenant_id=i, name=wl.name,
+                        slo=SLOPolicy(priority=1.0,
+                                      kernel_cycle_limit=limit),
+                        kernel=wl))
+    return out
+
+
+def _measure(T: int, duration_ns: float, *, fifo_capacity: int = 256,
+             seed: int = 0, reps: int = 2):
+    """(n_packets, event_s, batched_s, checks) for one tenant count.
+
+    The batched path is timed ``reps`` times (min taken) — it is cheap
+    enough to repeat and host noise otherwise dominates the ratio; the
+    event path runs once (it is the 10-100x-longer leg)."""
+    from repro.sim.engine import Simulator
+    from repro.sim.fastpath import BatchedSimulator
+    from repro.sim.traffic import equal_share_traces
+    trace = equal_share_traces(T, sizes=[512] * T, seed=seed,
+                               duration_ns=duration_ns, arrays=True)
+    n = len(trace)
+    se = Simulator(_tenants(T), fifo_capacity=fifo_capacity)
+    t0 = time.perf_counter()
+    re = se.run(trace.to_packets(), horizon=duration_ns)
+    ev_s = time.perf_counter() - t0
+    ba_s, rb = float("inf"), None
+    for _ in range(max(1, reps)):
+        sb = BatchedSimulator(_tenants(T), fifo_capacity=fifo_capacity)
+        t0 = time.perf_counter()
+        rb = sb.run(trace, horizon=duration_ns)
+        ba_s = min(ba_s, time.perf_counter() - t0)
+    agree = all(
+        re.stats[i].completed == rb.stats[i].completed
+        and re.stats[i].killed == rb.stats[i].killed
+        and re.stats[i].drops == rb.stats[i].drops
+        and re.stats[i].last_completion == rb.stats[i].last_completion
+        for i in range(T)) and len(re.events) == len(rb.events)
+    return n, ev_s, ba_s, agree
+
+
+def _fleet_sweep_row(fast: bool):
+    """The 128-tenant x ~10^6-packet registered scenario, batched path
+    (the scale the event loop cannot practically reach)."""
+    from repro.api import get_scenario, run_scenario
+    spec = get_scenario("fleet_sweep")
+    if fast:
+        spec = spec.replace(duration_us=1024.0, horizon_us=1024.0)
+    t0 = time.perf_counter()
+    rep = run_scenario(spec, "sim")
+    dt = time.perf_counter() - t0
+    d = rep.to_dict()["tenants"]
+    n = sum(v["arrivals"] for v in d.values())
+    return n, dt
+
+
+def run(*, smoke: bool = False, duration_us: float = 0.0):
+    """(rows, headline) in the benchmarks.run harness convention."""
+    if not duration_us:
+        duration_us = 400.0 if smoke else 3000.0
+    counts = (32,) if smoke else TENANT_COUNTS
+    rows = [("T", "packets", "event_pkts_per_s", "batched_pkts_per_s",
+             "speedup", "decisions_agree")]
+    head = {}
+    for T in counts:
+        n, ev_s, ba_s, agree = _measure(T, duration_us * 1e3)
+        speedup = ev_s / ba_s
+        rows.append((T, n, round(n / ev_s), round(n / ba_s),
+                     round(speedup, 2), agree))
+        head[f"speedup_T{T}"] = round(speedup, 2)
+        head[f"batched_pkts_per_s_T{T}"] = round(n / ba_s)
+        if not agree:
+            head["decisions_agree"] = False
+    head.setdefault("decisions_agree", True)
+    if not smoke:
+        n, dt = _fleet_sweep_row(fast=False)
+        rows.append(("fleet_sweep(128)", n, "-", round(n / dt), "-", "-"))
+        head["fleet_sweep_packets"] = n
+        head["fleet_sweep_wall_s"] = round(dt, 1)
+    head["guard_speedup_T32"] = GUARD_SPEEDUP_T32
+    head["guard_ok"] = bool(head["speedup_T32"] >= GUARD_SPEEDUP_T32
+                            and head["decisions_agree"])
+    return rows, head
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="T=32 only, short trace; nonzero exit if the "
+                         f"batched path is < {GUARD_SPEEDUP_T32}x")
+    ap.add_argument("--duration-us", type=float, default=0.0)
+    args = ap.parse_args(argv)
+    rows, head = run(smoke=args.smoke, duration_us=args.duration_us)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(head)
+    if args.smoke and not head["guard_ok"]:
+        print(f"FAIL: batched datapath {head['speedup_T32']}x < "
+              f"{GUARD_SPEEDUP_T32}x guard at T=32 (or decisions diverged)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

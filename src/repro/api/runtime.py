@@ -77,12 +77,14 @@ class SimRuntime:
     def __init__(self, *, scheduler: str = "wlbvt", frag=None,
                  arb: str = "dwrr", fifo_capacity: int = 4096,
                  io_demand_weights=None, record_timeline: bool = False,
-                 control_interval_ns: float = 8000.0):
+                 control_interval_ns: float = 8000.0,
+                 datapath: str = "event"):
         self._kw = dict(scheduler=scheduler, frag=frag, arb=arb,
                         fifo_capacity=fifo_capacity,
                         io_demand_weights=io_demand_weights,
                         record_timeline=record_timeline,
                         control_interval_ns=control_interval_ns)
+        self._datapath = datapath
         self._tenants: List[ECTX] = []
         self._controller = None
         self._sim = None
@@ -100,7 +102,8 @@ class SimRuntime:
                    io_demand_weights=weights,
                    record_timeline=spec.record_timeline,
                    control_interval_ns=(spec.controller.interval_ns
-                                        if spec.controller else 8000.0))
+                                        if spec.controller else 8000.0),
+                   datapath=spec.datapath or "event")
 
     # -- lifecycle ----------------------------------------------------------
     def create_tenant(self, tenant_id: int, slo: SLOPolicy, *,
@@ -128,21 +131,40 @@ class SimRuntime:
 
     def _seal(self):
         if self._sim is None:
-            from repro.sim.engine import Simulator
+            from repro.sim.fastpath import build_simulator
             if not self._tenants:
                 raise RuntimeError("no tenants created")
-            self._sim = Simulator(self._tenants,
-                                  controller=self._controller, **self._kw)
+            self._sim = build_simulator(
+                self._tenants, datapath=self._datapath,
+                controller=self._controller, **self._kw)
         return self._sim
 
     # -- clock + work -------------------------------------------------------
     def inject(self, work: Sequence) -> None:
+        """Queue work: a ``TracePacket`` sequence, or a ``TraceArrays``
+        column bundle (the SoA twin — cheap at million-packet scale)."""
         self._seal()                  # tenant set is bound from here on
-        self._pending.extend(work)
+        from repro.sim.traffic import TraceArrays
+        if isinstance(work, TraceArrays):
+            self._pending.append(work)
+        else:
+            self._pending.extend(work)
 
     def run_until(self, t: Optional[float] = None) -> float:
+        from repro.sim.traffic import (TraceArrays, TracePacket,
+                                       merge_trace_arrays)
         sim = self._seal()
         pending, self._pending = self._pending, []
+        if any(isinstance(p, TraceArrays) for p in pending):
+            # normalize mixed injections: lift loose packets into one
+            # column bundle, then merge chronologically
+            packets = [p for p in pending if isinstance(p, TracePacket)]
+            bundles = [p for p in pending if isinstance(p, TraceArrays)]
+            if packets:
+                bundles.append(TraceArrays.from_packets(packets))
+            pending = merge_trace_arrays(*bundles)
+            if self._datapath == "event":    # event loop wants packets
+                pending = pending.to_packets()
         self.result = sim.run(pending, horizon=t)
         self._events.extend(self.result.events)
         return sim.now
@@ -167,8 +189,10 @@ class SimRuntime:
                 base_weights=np.ones(T),
                 p99_targets=spec.controller.p99_targets(
                     spec.tenants, "sim", T)))
-        self.inject(build_traces(spec))
-        self.run_until(None)          # drain every queued event
+        self.inject(build_traces(spec, arrays=spec.datapath == "batched"))
+        # horizon_us > 0: fixed measurement window (queued work is cut
+        # off); default drains every queued event
+        self.run_until(spec.horizon_us * 1e3 if spec.horizon_us else None)
         return self.report(spec)
 
     # -- report -------------------------------------------------------------
@@ -217,16 +241,21 @@ class SimRuntime:
             extras=_jsonify(extras))
 
 
-def build_traces(spec: ScenarioSpec):
-    """Materialize the per-tenant packet traces a spec describes."""
-    from repro.sim.traffic import make_trace, merge_traces
+def build_traces(spec: ScenarioSpec, *, arrays: bool = False):
+    """Materialize the per-tenant packet traces a spec describes.
+
+    ``arrays=True`` returns the ``TraceArrays`` column bundle instead of
+    ``TracePacket`` objects — identical packet sequence, no per-packet
+    Python objects (the batched datapath consumes it directly)."""
+    from repro.sim.traffic import (make_trace_arrays, merge_trace_arrays)
     traces = []
     for i, t in enumerate(spec.tenants):
         a = t.arrival
-        traces.append(make_trace(
+        traces.append(make_trace_arrays(
             i, size=a.size, share=a.share, seed=spec.seed + a.seed_offset,
             duration_ns=a.duration_frac * spec.duration_us * 1e3))
-    return merge_traces(*traces)
+    merged = merge_trace_arrays(*traces)
+    return merged if arrays else merged.to_packets()
 
 
 def _io_demand(spec: ScenarioSpec) -> List[float]:

@@ -34,6 +34,7 @@ class WorkloadSpec:
     io_kind: str = "none"            # none | dma_read | dma_write | egress
     io_bytes_factor: float = 1.0
     io_fixed_bytes: int = 0
+    spin_factor: float = 1.0         # synthetic congestor multiplier
 
     def build(self):
         """Materialize the simulator's ``WorkloadModel``."""
@@ -43,7 +44,8 @@ class WorkloadSpec:
         return WorkloadModel(self.name or "custom", self.compute_base,
                              self.compute_per_byte, io_kind=self.io_kind,
                              io_bytes_factor=self.io_bytes_factor,
-                             io_fixed_bytes=self.io_fixed_bytes)
+                             io_fixed_bytes=self.io_fixed_bytes,
+                             spin_factor=self.spin_factor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +136,9 @@ class ScenarioSpec:
     frag_mode: str = "off"           # "off" | "software" | "hardware"
     frag_bytes: int = 512
     duration_us: float = 150.0       # sim horizon (drains remaining work)
+    horizon_us: float = 0.0          # >0: stop the sim clock here instead
+    #                                  of draining queued work (fixed
+    #                                  measurement window, fig9-style)
     fifo_capacity: int = 4096
     io_demand_weights: str = "uniform"   # "uniform" | "demand"
     record_timeline: bool = False
@@ -141,6 +146,8 @@ class ScenarioSpec:
     seed: int = 0
     serve: ServeSpec = ServeSpec()
     analytic: str = ""               # "" | "ppb": computed, not simulated
+    datapath: str = "event"          # sim backend: "event" | "batched"
+    #                                  (same decisions — DESIGN.md §8)
 
     def frag(self) -> FragmentationPolicy:
         if self.frag_mode == "off":

@@ -2,6 +2,7 @@
 from repro.core.accounting import (FCTTracker, TimeAveragedJain,
                                    jain_fairness, weighted_jain)
 from repro.core.admission import AdmissionError, SegmentAllocator
+from repro.core.engine_base import BudgetLedger, EngineBase, EQHub
 from repro.core.events import Event, EventKind, EventQueue
 from repro.core.fmq import FMQ, PacketDescriptor, PushResult
 from repro.core.fragmentation import (Fragment, FragmentationPolicy,
@@ -12,7 +13,8 @@ from repro.core import sched_generic, wlbvt
 
 __all__ = [
     "FCTTracker", "TimeAveragedJain", "jain_fairness", "weighted_jain",
-    "AdmissionError", "SegmentAllocator", "Event", "EventKind", "EventQueue",
+    "AdmissionError", "SegmentAllocator", "BudgetLedger", "EngineBase",
+    "EQHub", "Event", "EventKind", "EventQueue",
     "FMQ", "PacketDescriptor", "PushResult", "Fragment",
     "FragmentationPolicy",
     "fragment_tokens", "fragment_transfer", "MatchingEngine", "MatchRule",

@@ -55,7 +55,10 @@ def run_one(name: str, backend: str, params, *, arch: str = "",
             f"{', '.join(sorted(accepted)) or 'none'})")
     spec = get_scenario(name, **params)
     if fast and not spec.analytic:
-        spec = spec.replace(duration_us=min(spec.duration_us, 60.0))
+        kw = {"duration_us": min(spec.duration_us, 60.0)}
+        if spec.horizon_us:
+            kw["horizon_us"] = min(spec.horizon_us, 60.0)
+        spec = spec.replace(**kw)
     if backend not in spec.backends and not spec.analytic:
         raise SystemExit(
             f"scenario {name!r} does not support backend {backend!r} "

@@ -31,12 +31,12 @@ from repro.configs.base import ModelConfig
 from repro.core import wlbvt as W
 from repro.core.accounting import TimeAveragedJain, jain_fairness
 from repro.core.admission import AdmissionError
-from repro.core.events import Event, EventKind, EventQueue
+from repro.core.engine_base import EngineBase
+from repro.core.events import Event, EventKind
 from repro.core.slo import ECTX, SLOPolicy
 from repro.serving.kv_cache import SlotManager
 from repro.serving.request import Request, RequestStatus
-from repro.telemetry import (G_IDX, GAUGES, Telemetry, apply_to_scheduler,
-                             compute_signals, tenant_report)
+from repro.telemetry import G_IDX, GAUGES, tenant_report
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,18 +106,23 @@ class ModelExecutor:
                                           self.jnp.asarray(keep))
 
 
-class Engine:
+class Engine(EngineBase):
     def __init__(self, ecfg: EngineConfig, executor=None):
+        # tenant/budget/EQ/telemetry plumbing is the shared engine-core
+        # layer (core/engine_base.py, DESIGN.md §8) — the same stack the
+        # cycle simulator runs on
+        T = ecfg.max_tenants
+        super().__init__(T, shared_eq=False, telemetry=ecfg.telemetry,
+                         telemetry_backend=ecfg.telemetry_backend)
         self.cfg = ecfg
         self.exe = executor or NullExecutor(ecfg)
-        T = ecfg.max_tenants
+        self.ectx = self.ectxs          # legacy aliases for the public
+        self.eq = self.eqhub.queues     # surface (dict views, shared state)
+        self.tokens_used = self.budget.spent
         self.slots = SlotManager(ecfg.max_slots, ecfg.max_len,
                                  overcommit=ecfg.kv_overcommit)
-        self.ectx: Dict[int, ECTX] = {}
         self.queues: Dict[int, deque] = {}
-        self.eq: Dict[int, EventQueue] = {}
         self.st = W.WLBVTState.create(np.ones(T))
-        self._installed = np.zeros(T, bool)
         self.rr_ptr = 0
         self.dwrr = W.DWRRState.create(np.ones(T))
         # slot state (numpy mirrors of device state)
@@ -132,14 +137,6 @@ class Engine:
         self.done: List[Request] = []
         self.decode_steps = 0
         self.prefill_chunks = 0
-        # telemetry plane (DESIGN.md §6): staged per event, committed once
-        # per step — a single jitted call when telemetry_backend="jnp"
-        self.tel = (Telemetry(T, backend=ecfg.telemetry_backend)
-                    if ecfg.telemetry else None)
-        self.controller = None               # see attach_controller
-        self._ctrl_baseline = None
-        self._admit = np.ones(T, bool)       # controller backpressure gate
-        self.tokens_used = np.zeros(T)       # lifetime token spend (billing)
         # SLO-configured base weights per knob (tracked through ECTX
         # create/destroy); the controller scales these, never overwrites
         self._prio_base = np.ones(T)
@@ -159,18 +156,13 @@ class Engine:
         self.slots.admit(tenant_id, slo.kv_quota_tokens)
         e = ECTX(tenant_id=tenant_id, name=name or f"tenant{tenant_id}",
                  slo=slo)
-        e.fmq_index = tenant_id
-        self.ectx[tenant_id] = e
         self.queues[tenant_id] = deque()
-        self.eq[tenant_id] = EventQueue()
         self.st.prio[tenant_id] = slo.priority
         self.dwrr.weights[tenant_id] = slo.dma_priority
         self._prio_base[tenant_id] = slo.priority
         self._dwrr_base[tenant_id] = slo.dma_priority
-        self._installed[tenant_id] = True
-        self.eq[tenant_id].push(Event(tenant_id, EventKind.ADMITTED,
-                                      self.step_count))
-        return e
+        return self.register_tenant(e, fmq_index=tenant_id, announce=True,
+                                    now=self.step_count)
 
     def destroy_ectx(self, tenant_id: int) -> List[Event]:
         """Tear down a tenant: kill in-flight requests, reject queued ones
@@ -181,7 +173,7 @@ class Engine:
         for s, r in enumerate(self.slot_req):
             if r is not None and r.tenant_id == tenant_id:
                 self._finish(s, RequestStatus.KILLED)
-        eq = self.eq.pop(tenant_id, None)
+        eq = self.eqhub.retire(tenant_id)
         for req in self.queues.pop(tenant_id, ()):
             req.status = RequestStatus.REJECTED
             req.finish_step = self.step_count
@@ -190,19 +182,11 @@ class Engine:
                 eq.push(Event(tenant_id, EventKind.EVICTED, self.step_count,
                               f"rid={req.rid} rejected: ectx destroyed"))
         self.slots.evict(tenant_id)
-        self.ectx.pop(tenant_id, None)
-        self._installed[tenant_id] = False
-        self._admit[tenant_id] = True
-        self.tokens_used[tenant_id] = 0.0  # budget is per tenant identity
+        # registry row, admission gate, budget, telemetry + controller
+        # history: one shared teardown (core/engine_base.py)
+        self.deregister_tenant(tenant_id)
         self._prio_base[tenant_id] = 1.0
         self._dwrr_base[tenant_id] = 1.0
-        if self.controller is not None:    # nor AIMD boost / pause state
-            self.controller.reset_tenant(tenant_id, base_weight=1.0)
-        if self.tel is not None:           # nor telemetry history
-            self.tel.reset_tenant(tenant_id)
-            if self._ctrl_baseline is not None:
-                self._ctrl_baseline["counts"][tenant_id] = 0
-                self._ctrl_baseline["hist"][tenant_id] = 0
         self.st.queue_len[tenant_id] = 0
         self.st.prio[tenant_id] = 1.0
         self.st.total_occup[tenant_id] = 0.0   # a reused tenant id must not
@@ -239,7 +223,7 @@ class Engine:
         # Lifetime billing budget (R5): a tenant whose total token spend
         # exhausted its allowance gets no further admission.
         tlimit = self.ectx[req.tenant_id].slo.total_cycle_limit
-        if tlimit and self.tokens_used[req.tenant_id] >= tlimit:
+        if self.budget.exhausted(req.tenant_id, tlimit):
             req.status = RequestStatus.REJECTED
             self._reject_count(req.tenant_id)
             self.eq[req.tenant_id].push(Event(
@@ -278,7 +262,7 @@ class Engine:
             self.tel.inc("rejected", tenant_id)
 
     def poll_events(self, tenant_id: int) -> List[Event]:
-        return self.eq[tenant_id].drain()
+        return self.eqhub.poll(tenant_id)
 
     # ------------------------------------------------------------------
     # data plane step
@@ -425,14 +409,14 @@ class Engine:
                 self._finish(s, RequestStatus.DONE)
 
     def _charge_tokens(self, tenant: int, n: int) -> None:
-        self.tokens_used[tenant] += n
+        self.budget.charge(tenant, n)
         if self.tel is not None:
             self.tel.inc("tokens", tenant, n)
 
     def _over_total_budget(self, tenant: int) -> bool:
         t = self.ectx.get(tenant)
-        return bool(t and t.slo.total_cycle_limit
-                    and self.tokens_used[tenant] > t.slo.total_cycle_limit)
+        return t is not None and self.budget.over_total(
+            tenant, t.slo.total_cycle_limit)
 
     def _kv_pressure(self) -> np.ndarray:
         caps = self.slots.quota_caps(self.cfg.max_tenants)
@@ -455,17 +439,12 @@ class Engine:
         if (self.controller is not None and self.cfg.qos_interval
                 and self.step_count > 0
                 and self.step_count % self.cfg.qos_interval == 0):
-            snap = tel.snapshot()
-            sig = compute_signals(
-                tel, prio=self.st.prio, total_occup=self.st.total_occup,
+            self.qos_tick(
+                prio=self.st.prio, total_occup=self.st.total_occup,
                 bvt=self.st.bvt, kv_pressure=gauges[G_IDX["kv_pressure"]],
-                baseline=self._ctrl_baseline, snap=snap)
-            self._ctrl_baseline = snap
-            act = self.controller.update(sig)
-            apply_to_scheduler(act, (self.st.prio, self._prio_base),
-                               (self.dwrr.weights, self._dwrr_base),
-                               installed=self._installed)
-            self._admit = act.admit
+                knobs=((self.st.prio, self._prio_base),
+                       (self.dwrr.weights, self._dwrr_base)),
+                installed=self._installed)
 
     def step(self) -> None:
         # R5: control traffic first

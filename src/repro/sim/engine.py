@@ -9,6 +9,13 @@ and an EQ control path served at highest IO priority.
 Event timing is exact: WLBVT's per-cycle ``update_tput`` is integrated
 lazily over piecewise-constant occupancy intervals (numerically identical
 to the per-cycle update).
+
+This is the *reference* event-loop path: one Python callback per event,
+trivially auditable against the paper's mechanism descriptions.  The
+tenant/budget/EQ/telemetry plumbing lives in ``core/engine_base.py``
+(shared with the serving engine), and the array-batched fast path in
+``sim/fastpath.py`` reproduces this engine's decisions bit-for-bit at
+>=10x the packet rate (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -20,15 +27,18 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.configs.osmosis_pspin import PSPIN, PsPINConfig
-from repro.core import (ECTX, EventKind, Event, EventQueue, FMQ,
+from repro.core import (ECTX, EngineBase, EventKind, Event, FMQ,
                         FragmentationPolicy, MatchingEngine,
                         PacketDescriptor, PushResult, fragment_transfer)
 from repro.core.accounting import jain_fairness
+from repro.core.engine_base import BudgetLedger
 from repro.core import wlbvt as W
 from repro.sim.traffic import TracePacket
 from repro.sim.workloads import WorkloadModel
-from repro.telemetry import (G_IDX, GAUGES, Telemetry, apply_to_scheduler,
-                             compute_signals)
+from repro.telemetry import G_IDX, GAUGES, Telemetry
+
+KT_RESERVOIR_CAP = 4096   # kernel-time samples retained per tenant
+_KT_RNG_SEED = 0xA11CE    # reservoir replacement stream (deterministic)
 
 
 @dataclasses.dataclass
@@ -38,16 +48,66 @@ class TenantStats:
     drops: int = 0
     served_payload_bytes: float = 0.0
     io_bytes_done: float = 0.0
-    kernel_times: List[float] = dataclasses.field(default_factory=list)
     first_arrival: float = float("inf")
     last_completion: float = 0.0
+    # kernel service times: bounded reservoir (Algorithm R once past the
+    # cap) + exact running count/sum — percentiles derive from the
+    # reservoir instead of an unbounded list (below the cap the sample
+    # is complete, so they are exact)
+    kernel_time_count: int = 0
+    kernel_time_sum: float = 0.0
+    _kt_buf: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _kt_rng: Optional[np.random.Generator] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _kt_pcache: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def record_kernel_time(self, value: float) -> None:
+        n = self.kernel_time_count
+        if self._kt_buf is None:
+            self._kt_buf = np.empty(KT_RESERVOIR_CAP)
+        if n < KT_RESERVOIR_CAP:
+            self._kt_buf[n] = value
+        else:
+            if self._kt_rng is None:
+                self._kt_rng = np.random.default_rng(_KT_RNG_SEED)
+            j = int(self._kt_rng.integers(0, n + 1))
+            if j < KT_RESERVOIR_CAP:
+                self._kt_buf[j] = value
+        self.kernel_time_count = n + 1
+        self.kernel_time_sum += value
+        self._kt_pcache = None
+
+    @property
+    def kernel_times(self) -> np.ndarray:
+        """The retained kernel-time sample (complete below the cap).
+        ``kernel_time_count``/``kernel_time_sum`` are always exact."""
+        if self._kt_buf is None:
+            return np.empty(0)
+        return self._kt_buf[:min(self.kernel_time_count, KT_RESERVOIR_CAP)]
+
+    def kernel_time_percentile(self, q: float) -> float:
+        """Reservoir percentile, cached until the next sample lands."""
+        if self.kernel_time_count == 0:
+            return 0.0
+        if self._kt_pcache is None:
+            self._kt_pcache = {}
+        if q not in self._kt_pcache:
+            self._kt_pcache[q] = float(np.percentile(self.kernel_times, q))
+        return self._kt_pcache[q]
 
     @property
     def fct(self) -> float:
-        if self.last_completion <= 0:
+        """Flow completion time: ``last_completion - first_arrival``.
+
+        Explicitly 0.0 when the tenant saw no arrivals (packets injected
+        before registration leave ``first_arrival`` unset) or no
+        completions — previously the ``min(first_arrival,
+        last_completion)`` guard silently collapsed those to 0."""
+        if self.last_completion <= 0 or self.first_arrival == float("inf"):
             return 0.0
-        return self.last_completion - min(self.first_arrival,
-                                          self.last_completion)
+        return max(0.0, self.last_completion - self.first_arrival)
 
 
 @dataclasses.dataclass
@@ -67,21 +127,21 @@ class SimResult:
     telemetry: Optional[Telemetry] = None
     sched_state: Optional[dict] = None   # final prio/total_occup/bvt +
     #                                      FIFO pressure, for signal reads
+    completions: Optional[list] = None   # (tenant, t) per kernel finish,
+    #                                      when record_completions is set
 
     def throughput_gbps(self, tenant: int) -> float:
         st = self.stats[tenant]
         return st.served_payload_bytes * 8.0 / max(self.time, 1e-9)
 
     def p50(self, tenant: int) -> float:
-        ts = self.stats[tenant].kernel_times
-        return float(np.percentile(ts, 50)) if ts else 0.0
+        return self.stats[tenant].kernel_time_percentile(50)
 
     def p99(self, tenant: int) -> float:
-        ts = self.stats[tenant].kernel_times
-        return float(np.percentile(ts, 99)) if ts else 0.0
+        return self.stats[tenant].kernel_time_percentile(99)
 
 
-class Simulator:
+class Simulator(EngineBase):
     def __init__(self, tenants: List[ECTX], *,
                  scheduler: str = "wlbvt",
                  frag: Optional[FragmentationPolicy] = None,
@@ -91,29 +151,31 @@ class Simulator:
                  io_demand_weights=None,
                  record_timeline: bool = False,
                  controller=None,
-                 control_interval_ns: float = 8000.0):
+                 control_interval_ns: float = 8000.0,
+                 record_completions: bool = False):
+        T = len(tenants)
+        super().__init__(T, shared_eq=True)
         self.hw = hw
         self.sched_kind = scheduler
         self.frag = frag or FragmentationPolicy(mode="off")
         self.record_timeline = record_timeline
+        self.record_completions = record_completions
 
         self.fmqs: List[FMQ] = []
         self.matching = MatchingEngine()
         for i, e in enumerate(tenants):
-            e.fmq_index = i
+            self.register_tenant(e, fmq_index=i)
             self.fmqs.append(FMQ(index=i, ectx=e, capacity=fifo_capacity))
         prios = [e.slo.priority for e in tenants]
         self.st = W.WLBVTState.create(prios)
         self.rr_ptr = 0
 
         self.free_pus = hw.num_pus
-        self.eq = EventQueue()
 
         # AXI: per-tenant fragment queues; entries are
         # (Fragment, kind, done_cb|None).  arb: "dwrr" (OSMOSIS) or "fifo"
         # (reference PsPIN — a blocking interconnect with no QoS: grants in
         # strict arrival order => HoL blocking, paper Fig. 5).
-        T = len(tenants)
         self.arb = arb
         self.axi_q: List[deque] = [deque() for _ in range(T)]
         self.axi_fifo: deque = deque()     # arrival order (fifo mode)
@@ -134,6 +196,7 @@ class Simulator:
         self._last_adv = 0.0
         self.stats: Dict[int, TenantStats] = {i: TenantStats()
                                               for i in range(T)}
+        self._completions: list = []
         # fairness integrals; IO fairness uses windowed byte counts so the
         # metric reflects per-window shares, not event granularity
         self._jain_pu_acc = 0.0
@@ -149,9 +212,8 @@ class Simulator:
         self._io_bytes_cum = np.zeros(T)
         self._tl: Dict[str, list] = {"t": [], "occup": [], "io_win": [],
                                      "qlen": []}
-        # telemetry plane (always on: committed at window boundaries) +
-        # optional closed-loop QoS controller (telemetry/controller.py)
-        self.tel = Telemetry(T, backend="numpy")
+        # telemetry plane (EngineBase; always on, committed at window
+        # boundaries) + optional closed-loop QoS controller
         self.controller = controller
         # SLO-configured base weights per knob: the controller scales
         # these (live = base * boost), never overwrites them
@@ -159,10 +221,8 @@ class Simulator:
                             self.egress_dwrr.weights.copy())
         self._ctrl_every = max(1, int(round(control_interval_ns
                                             / self.io_window_ns)))
-        self._ctrl_baseline = None
         self._win_count = 0
-        self._cycles_used = np.zeros(T)      # lifetime PU-cycles (billing)
-        self._admit = np.ones(T, bool)       # controller backpressure gate
+        self._gauges_buf = np.zeros((len(GAUGES), T))
 
     # -- event machinery ---------------------------------------------------
     def _post(self, t: float, fn: Callable[[], None]) -> None:
@@ -203,33 +263,32 @@ class Simulator:
             self._win_start += self.io_window_ns
         self._last_adv = t
 
+    def _kv_pressure_row(self) -> np.ndarray:
+        """Per-tenant FIFO pressure (depth / capacity) — the sim analogue
+        of the serving engine's KV pressure gauge.  The batched fast path
+        overrides this with its SoA depth counters (same values)."""
+        return np.array([len(f) / f.capacity for f in self.fmqs])
+
     def _commit_window(self, occ: np.ndarray) -> None:
         """Flush staged telemetry + push gauge samples for one IO window;
         run the QoS control loop every ``_ctrl_every`` windows."""
         self.tel.commit()
-        gauges = np.zeros((len(GAUGES), len(self.fmqs)))
+        gauges = self._gauges_buf    # all rows overwritten below
         gauges[G_IDX["occupancy"]] = occ
         gauges[G_IDX["queue_len"]] = self.st.queue_len
         gauges[G_IDX["service_rate"]] = self._win_io / self.io_window_ns
-        gauges[G_IDX["kv_pressure"]] = [len(f) / f.capacity
-                                        for f in self.fmqs]
+        gauges[G_IDX["kv_pressure"]] = self._kv_pressure_row()
         self.tel.commit_window(gauges)
         self._win_count += 1
         if (self.controller is not None
                 and self._win_count % self._ctrl_every == 0):
-            snap = self.tel.snapshot()
-            sig = compute_signals(
-                self.tel, prio=self.st.prio,
-                total_occup=self.st.total_occup, bvt=self.st.bvt,
-                kv_pressure=gauges[G_IDX["kv_pressure"]],
-                baseline=self._ctrl_baseline, snap=snap)
-            self._ctrl_baseline = snap
-            act = self.controller.update(sig)
             pb, db, eb = self._sched_base
-            apply_to_scheduler(act, (self.st.prio, pb),
-                               (self.dwrr.weights, db),
-                               (self.egress_dwrr.weights, eb))
-            self._admit = act.admit
+            self.qos_tick(
+                prio=self.st.prio, total_occup=self.st.total_occup,
+                bvt=self.st.bvt,
+                kv_pressure=gauges[G_IDX["kv_pressure"]],
+                knobs=((self.st.prio, pb), (self.dwrr.weights, db),
+                       (self.egress_dwrr.weights, eb)))
 
     # -- ingress -------------------------------------------------------------
     def _arrival(self, pkt: TracePacket) -> None:
@@ -246,19 +305,19 @@ class Simulator:
             # arrivals there would latch a paused tenant paused forever.
             st.drops += 1
             self.tel.inc("rejected", i)
-            self.eq.push(Event(i, EventKind.BACKPRESSURE, self.now))
+            self.eqhub.push(Event(i, EventKind.BACKPRESSURE, self.now))
             return
         res = fmq.push(PacketDescriptor(i, pkt.size, self.now))
         if res == PushResult.DROPPED:
             st.drops += 1
             self.tel.inc("drops", i)
-            self.eq.push(Event(i, EventKind.QUEUE_OVERFLOW, self.now))
+            self.eqhub.push(Event(i, EventKind.QUEUE_OVERFLOW, self.now))
             return
         if res == PushResult.MARKED:
             # paper's mark-before-drop path: congestion signal surfaced
             # through the tenant EQ and the telemetry plane before losses
             self.tel.inc("ecn_marks", i)
-            self.eq.push(Event(i, EventKind.ECN_MARK, self.now))
+            self.eqhub.push(Event(i, EventKind.ECN_MARK, self.now))
         self.st.queue_len[i] += 1
         self._dispatch()
 
@@ -295,21 +354,14 @@ class Simulator:
         payload = max(0, pkt.size_bytes - self.hw.header_bytes)
         t0 = self.now + self.hw.dma_setup_cycles   # L2->L1 DMA, hides sched
         comp = wl.compute_cycles(payload)
-        limit = fmq.ectx.slo.kernel_cycle_limit
-        killed = bool(limit and comp > limit)
-        if killed:
-            comp = float(limit)
-        # lifetime budget (billing, §5.2): the watchdog also stops a kernel
-        # at the tenant's remaining *total* cycle allowance — mirrors the
-        # per-kernel limit, but the exhaustion is permanent
-        tlimit = fmq.ectx.slo.total_cycle_limit
-        budget_killed = False
-        if tlimit:
-            remaining = float(tlimit) - self._cycles_used[idx]
-            if comp > remaining:
-                budget_killed = killed = True
-                comp = max(0.0, remaining)
-        self._cycles_used[idx] += comp
+        # watchdog budgets (shared clamp semantics: core/engine_base.py) —
+        # the per-kernel cycle limit, then the tenant's remaining lifetime
+        # allowance (billing, §5.2; exhaustion is permanent)
+        comp, killed = BudgetLedger.clamp_kernel(
+            comp, fmq.ectx.slo.kernel_cycle_limit)
+        comp, budget_killed = self.budget.clamp_total(
+            idx, comp, fmq.ectx.slo.total_cycle_limit)
+        killed = killed or budget_killed
         io_bytes = 0 if killed else wl.io_bytes(payload)
 
         if io_bytes and self.frag.mode == "software":
@@ -337,16 +389,17 @@ class Simulator:
         if killed:
             st.killed += 1
             self.tel.inc("killed", idx)
-            self.eq.push(Event(
-                idx, EventKind.TOTAL_BUDGET_EXCEEDED if budget_killed
-                else EventKind.CYCLE_BUDGET_EXCEEDED, self.now))
+            self.eqhub.push(Event(idx, BudgetLedger.kill_kind(budget_killed),
+                                  self.now))
         else:
             st.completed += 1
             st.served_payload_bytes += payload
             self.tel.inc("completed", idx)
             self.tel.inc("bytes_out", idx, payload)
-        st.kernel_times.append(self.now - (t_start - self.hw.dma_setup_cycles))
+        st.record_kernel_time(self.now - (t_start - self.hw.dma_setup_cycles))
         st.last_completion = self.now
+        if self.record_completions:
+            self._completions.append((idx, self.now))
         # sojourn (arrival -> completion) latency: queueing included, so
         # the control plane sees congestion the service time alone hides
         self.tel.lat(idx, self.now - pkt.arrival)
@@ -507,13 +560,14 @@ class Simulator:
             jain_io_timeavg=(self._jain_io_acc / self._jain_io_t
                              if self._jain_io_t else 1.0),
             timeline=tl,
-            events=self.eq.drain(),
+            events=self.eqhub.drain_all(),
             telemetry=self.tel,
             sched_state={
                 "prio": self.st.prio.copy(),
                 "total_occup": self.st.total_occup.copy(),
                 "bvt": self.st.bvt.copy(),
-                "kv_pressure": np.array([len(f) / f.capacity
-                                         for f in self.fmqs]),
+                "kv_pressure": self._kv_pressure_row(),
             },
+            completions=(list(self._completions)
+                         if self.record_completions else None),
         )

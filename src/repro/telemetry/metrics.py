@@ -186,6 +186,12 @@ class Telemetry:
     def inc(self, name: str, tenant: int, amount: float = 1.0) -> None:
         self._staged_counts[tenant, C_IDX[name]] += amount
 
+    def inc_column(self, name: str, totals) -> None:
+        """Stage pre-aggregated per-tenant totals (``[T]``) in one add —
+        equal to per-event ``inc`` calls for the integer-valued totals
+        this plane records (integer float sums are exact)."""
+        self._staged_counts[:, C_IDX[name]] += totals
+
     def lat(self, tenant: int, value: float) -> None:
         self._staged_lat.append((tenant, value))
 

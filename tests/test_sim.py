@@ -135,3 +135,65 @@ def test_control_path_priority():
     sim.submit_control(64, cb)
     sim.run([], horizon=None)
     assert "ctrl" in done_at
+
+
+# ---------------------------------------------------------------------------
+# TenantStats: fct semantics + bounded kernel-time reservoir (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def test_fct_zero_without_arrivals():
+    """Completions with no recorded arrival (packets injected before
+    registration) must report fct == 0.0 explicitly — not a silently
+    collapsed min() against last_completion."""
+    from repro.sim.engine import TenantStats
+    st = TenantStats()
+    assert st.fct == 0.0                       # nothing happened
+    st.last_completion = 500.0                 # completion, no arrival
+    assert st.first_arrival == float("inf")
+    assert st.fct == 0.0
+    st.first_arrival = 120.0                   # normal case
+    assert st.fct == pytest.approx(380.0)
+    st.first_arrival = 600.0                   # degenerate: never negative
+    assert st.fct == 0.0
+
+
+def test_kernel_time_reservoir_bounded_and_exact_below_cap():
+    from repro.sim.engine import KT_RESERVOIR_CAP, TenantStats
+    st = TenantStats()
+    rng = np.random.default_rng(7)
+    vals = rng.uniform(10.0, 1000.0, size=KT_RESERVOIR_CAP + 500)
+    for v in vals[:100]:
+        st.record_kernel_time(float(v))
+    # below the cap the sample is complete: exact percentiles
+    assert len(st.kernel_times) == 100
+    assert st.kernel_time_percentile(50) == pytest.approx(
+        float(np.percentile(vals[:100], 50)))
+    for v in vals[100:]:
+        st.record_kernel_time(float(v))
+    # past the cap: bounded memory, exact count/sum, sane percentiles
+    assert len(st.kernel_times) == KT_RESERVOIR_CAP
+    assert st.kernel_time_count == len(vals)
+    assert st.kernel_time_sum == pytest.approx(sum(float(v) for v in vals))
+    assert vals.min() <= st.kernel_time_percentile(99) <= vals.max()
+    # deterministic: an identical sequence yields an identical reservoir
+    st2 = TenantStats()
+    for v in vals:
+        st2.record_kernel_time(float(v))
+    assert np.array_equal(st.kernel_times, st2.kernel_times)
+
+
+def test_sim_kernel_times_bounded_end_to_end():
+    """A long congested run keeps per-tenant kernel-time memory at the
+    reservoir cap while p50/p99 stay exact running-count-aware."""
+    from repro.sim.engine import KT_RESERVOIR_CAP
+    wl = spin_workload("spin", 0.2)
+    tenants = make_tenants([wl, wl])
+    trace = equal_share_traces(2, sizes=[64, 64], duration_ns=400_000,
+                               seed=3)
+    res = Simulator(tenants).run(trace)
+    total = sum(res.stats[i].kernel_time_count for i in range(2))
+    assert total == sum(res.stats[i].completed + res.stats[i].killed
+                       for i in range(2))
+    for i in range(2):
+        assert len(res.stats[i].kernel_times) <= KT_RESERVOIR_CAP
+        if res.stats[i].kernel_time_count:
+            assert res.p99(i) >= res.p50(i) > 0.0
