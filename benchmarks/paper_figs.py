@@ -3,15 +3,11 @@ function returns CSV-ish rows and a headline dict used by run.py and the
 EXPERIMENTS.md table generator."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.configs.osmosis_pspin import PSPIN
 from repro.core import FragmentationPolicy
 from repro.sim.scenarios import (run_compute_mixture,
                                  run_congestor_victim_compute,
                                  run_hol_blocking, run_io_mixture,
                                  run_standalone, service_time_vs_ppb)
-from repro.sim.workloads import WORKLOADS, ppb
 
 
 def fig3_ppb():

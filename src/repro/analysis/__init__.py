@@ -1,0 +1,23 @@
+"""Repo-aware static analysis suite (DESIGN.md §9).
+
+AST-level checkers for the invariants the dynamic test suite can only
+sample: backend purity of jit-traced kernels, time-unit flow across the
+ns/us/cycles/steps domains, EventKind emit/consume exhaustiveness, and
+frozen-spec / fixed-shape discipline.  Run via::
+
+    python -m repro.analysis.check [--json] [--baseline FILE] [--fix-baseline]
+
+The framework (rule registry, repo index, baseline handling) lives in
+``framework``; each pass is one module registering one or more rules.
+Importing this package pulls in every built-in rule.
+"""
+from repro.analysis.framework import (  # noqa: F401
+    Baseline, Finding, Module, RepoIndex, Rule, RULE_REGISTRY,
+    register_rule, run_rules,
+)
+from repro.analysis import purity, units, events, frozen  # noqa: F401
+
+__all__ = [
+    "Baseline", "Finding", "Module", "RepoIndex", "Rule", "RULE_REGISTRY",
+    "register_rule", "run_rules",
+]

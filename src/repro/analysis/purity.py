@@ -1,0 +1,460 @@
+"""Pass 1 — jit-purity / backend-purity (DESIGN.md §9.2).
+
+Scope: every function that is backend-generic (takes an ``xp`` parameter
+— the numpy/jnp shared-subset idiom of ``core/sched_generic.py`` and
+``telemetry/metrics.py``) plus every function reachable from a
+``jax.jit`` entry point through the repo-local call graph (including
+``jax.lax.scan``/``cond``/``while_loop`` body arguments and nested
+closures).
+
+Inside that scope the kernel contract is enforced:
+
+  * no ``np.<ufunc>.at`` / other in-place numpy mutation APIs;
+  * no subscript stores (``x[i] = v`` / ``x[i] += v``) — kernels return
+    new arrays;
+  * no bare ``np.*`` references (backend mixing) except the allowlisted
+    host-constant idioms: dtype/constant attributes (``np.float32``,
+    ``np.inf``...), ``xp is np`` backend tests, numpy guards (code under
+    an ``xp is np`` branch), and calls whose arguments are all literals
+    or ALL_CAPS module constants (``np.log(HIST_GROWTH)``);
+  * no Python branches on traced values: ``if``/``while``/ternary tests
+    may only compare with ``is``/``is not`` (the ``cap is None`` static
+    pattern) or involve parameters annotated as Python scalars
+    (``temperature: float``), which jit treats as trace-time constants;
+  * no data-dependent shapes (``nonzero``/``flatnonzero``/``unique``/
+    ``argwhere``/one-arg ``where``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.framework import (
+    Finding, Module, RepoIndex, Rule, import_map, is_const, jnp_aliases,
+    numpy_aliases, register_rule,
+)
+
+# modules whose functions are subject to the kernel contract (roots may
+# pull callees in from anywhere in the index)
+DEFAULT_SCOPE = (
+    "src/repro/core/*", "src/repro/telemetry/*", "src/repro/serving/*",
+    "src/repro/sim/*",
+)
+
+# np attributes that are host constants / dtypes — fine under trace
+NP_CONST_ATTRS = {
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "complex64",
+    "complex128", "pi", "e", "inf", "nan", "newaxis", "ndarray", "dtype",
+    "generic", "number", "integer", "floating", "finfo", "iinfo",
+}
+
+# numpy APIs that mutate an operand in place
+NP_INPLACE_ATTRS = {"put", "place", "copyto", "putmask", "fill_diagonal"}
+
+# callables whose function-typed arguments are traced (control-flow HOFs)
+TRACED_HOF_ATTRS = {"scan", "cond", "while_loop", "fori_loop", "switch",
+                    "map", "associative_scan", "checkpoint", "remat",
+                    "vmap", "grad", "value_and_grad"}
+
+DYNAMIC_SHAPE_ATTRS = {"nonzero", "flatnonzero", "unique", "argwhere"}
+
+SCALAR_ANNOTATIONS = {"float", "int", "bool", "str"}
+
+FuncKey = Tuple[str, str]  # (module path, function qualname)
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` -> ["a", "b", "c"]; None for non-trivial bases."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+class _FuncTable:
+    """Every function/lambda-free def in the index, keyed by
+    (path, qualname), plus per-module import maps."""
+
+    def __init__(self, index: RepoIndex):
+        self.index = index
+        self.defs: Dict[FuncKey, ast.AST] = {}
+        self.imports: Dict[str, Dict[str, str]] = {}
+        for mod in index.modules:
+            self.imports[mod.path] = import_map(mod.tree)
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self.defs[(mod.path, node.qual)] = node
+
+    def resolve(self, mod: Module, scope_qual: str,
+                node: ast.AST) -> Optional[FuncKey]:
+        """Resolve a called expression to a function def in the index."""
+        name = _name_of(node)
+        if name is not None:
+            # innermost enclosing scope first, then module level
+            qual = scope_qual
+            while True:
+                cand = f"{qual}.{name}" if qual else name
+                if (mod.path, cand) in self.defs:
+                    return (mod.path, cand)
+                if "." not in qual:
+                    break
+                qual = qual.rsplit(".", 1)[0]
+            if (mod.path, name) in self.defs:
+                return (mod.path, name)
+            dotted = self.imports[mod.path].get(name)
+            if dotted:
+                return self._resolve_dotted(dotted)
+            return None
+        chain = _attr_chain(node)
+        if chain and len(chain) >= 2:
+            base = self.imports[mod.path].get(chain[0])
+            if base:
+                return self._resolve_dotted(".".join([base] + chain[1:]))
+        return None
+
+    def _resolve_dotted(self, dotted: str) -> Optional[FuncKey]:
+        if "." not in dotted:
+            return None
+        mod_name, func = dotted.rsplit(".", 1)
+        target = self.index.by_dotted(mod_name)
+        if target is not None and (target.path, func) in self.defs:
+            return (target.path, func)
+        return None
+
+
+def _called_funcs(fn: ast.AST, table: _FuncTable, mod: Module) -> Set[FuncKey]:
+    """Repo-local callees of ``fn`` (direct calls + function-typed args of
+    jax control-flow HOFs + nested defs, which are traced as closures)."""
+    out: Set[FuncKey] = set()
+    qual = fn.qual
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                out.add((mod.path, node.qual))
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        key = table.resolve(mod, qual, node.func)
+        if key is not None:
+            out.add(key)
+        chain = _attr_chain(node.func)
+        if chain and chain[-1] in TRACED_HOF_ATTRS:
+            for arg in node.args:
+                akey = table.resolve(mod, qual, arg)
+                if akey is not None:
+                    out.add(akey)
+    return out
+
+
+def _jit_roots(mod: Module, table: _FuncTable) -> Set[FuncKey]:
+    """Functions handed to ``jax.jit`` (call or decorator form) in a
+    module: named references, lambdas' repo-local callees, and
+    ``functools.partial(jax.jit, ...)`` decorations."""
+    roots: Set[FuncKey] = set()
+
+    def is_jit(node: ast.AST) -> bool:
+        chain = _attr_chain(node)
+        return bool(chain) and chain[-1] == "jit"
+
+    def add_target(target: ast.AST, qual: str) -> None:
+        if isinstance(target, ast.Lambda):
+            for sub in ast.walk(target.body):
+                if isinstance(sub, ast.Call):
+                    key = table.resolve(mod, qual, sub.func)
+                    if key is not None:
+                        roots.add(key)
+            return
+        key = table.resolve(mod, qual, target)
+        if key is not None:
+            roots.add(key)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and is_jit(node.func) and node.args:
+            add_target(node.args[0], node.qual)
+        elif isinstance(node, ast.Call) and node.args and is_jit(node.args[0]):
+            # functools.partial(jax.jit, static_argnames=...) decorator
+            chain = _attr_chain(node.func)
+            if chain and chain[-1] == "partial":
+                parent = node.parent
+                if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    roots.add((mod.path, parent.qual))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if is_jit(dec):
+                    roots.add((mod.path, node.qual))
+    return roots
+
+
+def _param_info(fn: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """(all param names, static param names).  A parameter is static when
+    annotated as a Python scalar (jit closes over it at trace time)."""
+    args = fn.args
+    every = [a for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+    if args.vararg:
+        every.append(args.vararg)
+    if args.kwarg:
+        every.append(args.kwarg)
+    names = {a.arg for a in every}
+    static = {"xp"}
+    for a in every:
+        ann = a.annotation
+        if isinstance(ann, ast.Name) and ann.id in SCALAR_ANNOTATIONS:
+            static.add(a.arg)
+        elif isinstance(ann, ast.Constant) and ann.value in SCALAR_ANNOTATIONS:
+            static.add(a.arg)
+        elif (isinstance(ann, ast.Subscript)
+              and isinstance(ann.slice, ast.Name)
+              and ann.slice.id in SCALAR_ANNOTATIONS):
+            static.add(a.arg)  # Optional[float] etc.
+    return names, static
+
+
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}  # trace-time metadata
+
+
+def _traced_ref(node: ast.Name) -> bool:
+    """False when the name is only read through trace-time metadata
+    (``x.shape``, ``x.ndim``, ``len(x)``) — those comparisons are static."""
+    cur: ast.AST = node
+    par = getattr(cur, "parent", None)
+    while isinstance(par, (ast.Attribute, ast.Subscript, ast.Call)):
+        if isinstance(par, ast.Attribute) and par.attr in STATIC_ATTRS:
+            return False
+        if (isinstance(par, ast.Call) and isinstance(par.func, ast.Name)
+                and par.func.id == "len" and cur in par.args):
+            return False
+        cur, par = par, getattr(par, "parent", None)
+    return True
+
+
+def _is_static_test(test: ast.AST, params: Set[str],
+                    static: Set[str]) -> bool:
+    """True when a branch condition is trace-time static: only ``is`` /
+    ``is not`` comparisons, shape/metadata comparisons, or no reference
+    to a non-static parameter."""
+    traced = params - static
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                continue
+            for sub in [node.left] + node.comparators:
+                for n in ast.walk(sub):
+                    if (isinstance(n, ast.Name) and n.id in traced
+                            and _traced_ref(n)):
+                        return False
+        elif isinstance(node, ast.Name) and node.id in traced:
+            par = node.parent
+            if node is test or isinstance(par, (ast.BoolOp, ast.UnaryOp)):
+                return False
+    return True
+
+
+@register_rule
+class JitPurityRule(Rule):
+    name = "jit-purity"
+    description = ("backend-generic/jit-traced kernels must stay pure: "
+                   "no numpy mixing, in-place stores, traced-value "
+                   "branches, or data-dependent shapes")
+
+    def __init__(self, scope: Tuple[str, ...] = DEFAULT_SCOPE):
+        self.scope = scope
+
+    # -- scope ---------------------------------------------------------------
+    def _in_scope_funcs(self, index: RepoIndex,
+                        table: _FuncTable) -> Set[FuncKey]:
+        scoped = {m.path for m in index.matching(list(self.scope))}
+        in_scope: Set[FuncKey] = set()
+        work: List[FuncKey] = []
+        for (path, qual), fn in table.defs.items():
+            names, _ = _param_info(fn)
+            if "xp" in names and path in scoped:
+                in_scope.add((path, qual))
+        for mod in index.modules:
+            if mod.path in scoped:
+                in_scope |= _jit_roots(mod, table)
+        work = list(in_scope)
+        while work:
+            key = work.pop()
+            fn = table.defs.get(key)
+            if fn is None:
+                continue
+            mod = index.get(key[0])
+            for callee in _called_funcs(fn, table, mod):
+                if callee not in in_scope:
+                    in_scope.add(callee)
+                    work.append(callee)
+        return in_scope
+
+    # -- checks --------------------------------------------------------------
+    def run(self, index: RepoIndex) -> List[Finding]:
+        table = _FuncTable(index)
+        findings: List[Finding] = []
+        for key in sorted(self._in_scope_funcs(index, table)):
+            fn = table.defs.get(key)
+            mod = index.get(key[0])
+            if fn is None or mod is None:
+                continue
+            findings.extend(self._check_function(mod, fn))
+        return findings
+
+    def _check_function(self, mod: Module, fn: ast.AST) -> List[Finding]:
+        findings: List[Finding] = []
+        np_names = numpy_aliases(mod.tree)
+        jnp_names = jnp_aliases(mod.tree)
+        params, static = _param_info(fn)
+        guarded = _np_guarded_nodes(fn, np_names)
+        consts = _module_constants(mod.tree)
+
+        def body_nodes(node: ast.AST):
+            """Walk, skipping nested defs (they are separate units)."""
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                yield child
+                yield from body_nodes(child)
+
+        nodes = [n for stmt in fn.body for n in [stmt] + list(body_nodes(stmt))]
+        # skip default-argument expressions (evaluated at def time, host)
+        defaults = set()
+        for d in fn.args.defaults + [d for d in fn.args.kw_defaults if d]:
+            defaults.add(d)
+            defaults.update(ast.walk(d))
+
+        for node in nodes:
+            if node in defaults:
+                continue
+            # np.<ufunc>.at(...) — in-place scatter
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "at"):
+                chain = _attr_chain(node.func)
+                if chain and chain[0] in np_names:
+                    findings.append(self.finding(
+                        mod, node,
+                        f"in-place `{'.'.join(chain)}` update inside a "
+                        "backend-generic/jit-traced kernel"))
+                    continue
+            # subscript stores
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Subscript):
+                        findings.append(self.finding(
+                            mod, t,
+                            "subscript store mutates an array in place; "
+                            "kernels must return new arrays "
+                            "(use `xp.where` / one-hot adds)"))
+            # bare numpy references (backend mixing)
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in np_names):
+                if self._np_use_allowed(node, guarded, consts):
+                    continue
+                findings.append(self.finding(
+                    mod, node,
+                    f"`{node.value.id}.{node.attr}` inside a backend-"
+                    "generic/jit-traced kernel mixes numpy into the "
+                    "traced path (use `xp`)"))
+            # Python branches on traced values
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                if not _is_static_test(node.test, params, static):
+                    kind = ("while" if isinstance(node, ast.While) else "if")
+                    findings.append(self.finding(
+                        mod, node,
+                        f"Python `{kind}` on a traced value; use "
+                        "`xp.where` (only `is None` / annotated-scalar "
+                        "config branches are static under jit)"))
+            # data-dependent shapes
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                attr = chain[-1] if chain else None
+                base_ok = (chain and (chain[0] in np_names
+                                      or chain[0] in jnp_names
+                                      or chain[0] == "xp"))
+                if attr in DYNAMIC_SHAPE_ATTRS and chain is not None:
+                    findings.append(self.finding(
+                        mod, node,
+                        f"`{attr}` produces a data-dependent shape; "
+                        "jit-traced kernels must stay fixed-shape"))
+                elif (attr == "where" and base_ok and len(node.args) == 1
+                      and not node.keywords):
+                    findings.append(self.finding(
+                        mod, node,
+                        "one-argument `where` returns data-dependent "
+                        "indices; use the three-argument select form"))
+        return findings
+
+    @staticmethod
+    def _np_use_allowed(node: ast.Attribute, guarded: Set[ast.AST],
+                        consts: Set[str]) -> bool:
+        if node.attr in NP_CONST_ATTRS:
+            return True
+        if node in guarded:
+            return True
+        par = node.parent
+        # `xp is np` backend tests reference the alias itself — but only
+        # via a bare Name, never an attribute, so nothing to allow here.
+        # np.f(<literals / ALL_CAPS consts>): host-constant math
+        if isinstance(par, ast.Call) and par.func is node:
+            if node.attr in NP_INPLACE_ATTRS:
+                return False
+            args = list(par.args) + [k.value for k in par.keywords]
+            if args and all(
+                    is_const(a)
+                    or (isinstance(a, ast.Name)
+                        and (a.id.isupper() or a.id in consts))
+                    for a in args):
+                return True
+        return False
+
+
+def _module_constants(tree: ast.Module) -> Set[str]:
+    """Module-level ALL_CAPS constant names."""
+    out: Set[str] = set()
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and t.id.isupper():
+                    out.add(t.id)
+        elif isinstance(stmt, ast.AnnAssign):
+            if isinstance(stmt.target, ast.Name) and stmt.target.id.isupper():
+                out.add(stmt.target.id)
+    return out
+
+
+def _np_guarded_nodes(fn: ast.AST, np_names: Set[str]) -> Set[ast.AST]:
+    """Nodes inside an ``xp is np`` guard (either branch of an If/IfExp
+    whose test is an xp-identity check) — numpy use there is the
+    sanctioned eager fast path."""
+    out: Set[ast.AST] = set()
+
+    def is_xp_np_test(test: ast.AST) -> bool:
+        for node in ast.walk(test):
+            if (isinstance(node, ast.Compare)
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in node.ops)):
+                names = {n.id for n in ast.walk(node)
+                         if isinstance(n, ast.Name)}
+                if "xp" in names and names & np_names:
+                    return True
+        return False
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.IfExp)) and is_xp_np_test(node.test):
+            branches = (node.body + node.orelse
+                        if isinstance(node, ast.If)
+                        else [node.body, node.orelse])
+            for b in branches:
+                out.add(b)
+                out.update(ast.walk(b))
+    return out

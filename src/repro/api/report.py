@@ -20,6 +20,12 @@ from typing import Any, Dict, List, Optional
 
 SCHEMA_VERSION = 1
 
+# the only report time domains: virtual ns (sim), engine steps (serve).
+# Single source of truth — runtime.py declares its per-backend unit from
+# this tuple and the static unit checker (repro.analysis, time-unit-flow)
+# validates every `time_unit` literal against it.
+TIME_UNITS = ("ns", "steps")
+
 # keys every per-tenant block must carry, on either backend
 TENANT_FIELDS = ("tenant_id", "name", "arrivals", "completed", "killed",
                  "drops", "rejected", "ecn_marks", "bytes_in", "bytes_out",
@@ -111,7 +117,7 @@ class RunReport:
                              f"{SCHEMA_VERSION}")
         if self.backend not in ("sim", "serve"):
             raise ValueError(f"unknown backend {self.backend!r}")
-        if self.time_unit not in ("ns", "steps"):
+        if self.time_unit not in TIME_UNITS:
             raise ValueError(f"unknown time_unit {self.time_unit!r}")
         for field in ("duration", "jain_pu", "jain_io"):
             v = getattr(self, field)

@@ -24,12 +24,16 @@ from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.api.report import RunReport, TenantReport, _jsonify
-from repro.api.spec import ScenarioSpec, TenantSpec
+from repro.api.report import RunReport, TenantReport, TIME_UNITS, _jsonify
+from repro.api.spec import ScenarioSpec
 from repro.core.events import Event
 from repro.core.slo import ECTX, SLOPolicy
 
 MAX_REPORT_EVENTS = 512   # EQ events embedded per report; rest summarized
+
+# per-backend time domains, from the report schema's single whitelist
+# (api/report.py TIME_UNITS) — never restate these as string literals
+NS_UNIT, STEPS_UNIT = TIME_UNITS
 
 
 @runtime_checkable
@@ -72,7 +76,7 @@ class SimRuntime:
     """
 
     backend = "sim"
-    time_unit = "ns"
+    time_unit = NS_UNIT
 
     def __init__(self, *, scheduler: str = "wlbvt", frag=None,
                  arb: str = "dwrr", fifo_capacity: int = 4096,
@@ -230,7 +234,7 @@ class SimRuntime:
         names = {i: e.name for i, e in enumerate(self._tenants)}
         return RunReport(
             scenario=spec.name if spec else "",
-            backend="sim", time_unit="ns", duration=float(res.time),
+            backend="sim", time_unit=NS_UNIT, duration=float(res.time),
             scheduler=self._kw["scheduler"], arbiter=self._kw["arb"],
             seed=int(spec.seed) if spec else 0,
             jain_pu=float(res.jain_pu_timeavg),
@@ -279,7 +283,7 @@ class ServeRuntime:
     """Runtime adapter over the multi-tenant TPU serving engine."""
 
     backend = "serve"
-    time_unit = "steps"
+    time_unit = STEPS_UNIT
 
     def __init__(self, ecfg=None, executor=None, **cfg_overrides):
         """``executor`` is either an executor instance or a factory
@@ -426,7 +430,7 @@ class ServeRuntime:
         events = _events_block(pending, extras)
         return RunReport(
             scenario=spec.name if spec else "",
-            backend="serve", time_unit="steps",
+            backend="serve", time_unit=STEPS_UNIT,
             duration=float(eng.step_count),
             scheduler=self.ecfg.scheduler, arbiter=self.ecfg.arbiter,
             seed=int(spec.seed) if spec else 0,
@@ -491,7 +495,7 @@ def _run_analytic(spec: ScenarioSpec) -> RunReport:
     rows = [[w, int(p), float(svc), float(budget), int(svc <= budget)]
             for w, lst in table.items() for (p, svc, budget) in lst]
     return RunReport(
-        scenario=spec.name, backend="sim", time_unit="ns", duration=0.0,
+        scenario=spec.name, backend="sim", time_unit=NS_UNIT, duration=0.0,
         scheduler=spec.scheduler, arbiter=spec.arbiter, seed=spec.seed,
         jain_pu=1.0, jain_io=1.0, tenants={}, events=[],
         telemetry=None, spec=_jsonify(spec.to_dict()),

@@ -26,6 +26,19 @@ class PsPINConfig:
     def num_pus(self) -> int:
         return self.num_clusters * self.pus_per_cluster
 
+    @property
+    def ns_per_cycle(self) -> float:
+        return 1.0 / self.clock_ghz
+
+    def cycles_ns(self, cycles: float) -> float:
+        """PU cycles -> virtual nanoseconds.  The event loops advance a
+        ns clock; every hardware cost expressed in cycles
+        (``dma_setup_cycles``, kernel compute, fragmentation overhead)
+        must pass through here before touching it.  At the default
+        1 GHz this is an exact ``* 1.0`` — time traces are bit-identical
+        to the historical cycles==ns behaviour."""
+        return cycles * self.ns_per_cycle
+
     def wire_ns_per_byte(self, gbps: float) -> float:
         return 8.0 / gbps                   # ns per byte at `gbps`
 

@@ -25,6 +25,43 @@ class EventKind(enum.Enum):
     EVICTED = "evicted"
 
 
+# Where each kind is consumed once it leaves the EQ.  Every member MUST
+# have a row here — ``repro.analysis`` (eq-event-exhaustiveness) fails
+# the CI gate otherwise — so adding a kind forces a decision about who
+# reacts to it.  All kinds additionally reach tenants via
+# ``Runtime.poll_events`` and the bounded ``RunReport.events`` block.
+EVENT_DISPOSITIONS = {
+    EventKind.KERNEL_ERROR:
+        "reserved (paper §5.2 fault channel); no kernel-fault model "
+        "emits it yet — pinned in analysis_baseline.json",
+    EventKind.CYCLE_BUDGET_EXCEEDED:
+        "telemetry: `killed` counter; report: per-tenant killed count "
+        "(watchdog clamp, engine_base.BudgetLedger.kill_kind)",
+    EventKind.TOTAL_BUDGET_EXCEEDED:
+        "telemetry: `killed` counter; billing exhaustion is permanent "
+        "(BudgetLedger.over_total gates later admissions)",
+    EventKind.MEMORY_FAULT:
+        "telemetry: `killed` counter; serving KV-quota violation path "
+        "(serving/engine._kill_request callers)",
+    EventKind.QUEUE_OVERFLOW:
+        "telemetry: `drops` counter -> signals.drop_rate -> QoS "
+        "controller admission pressure",
+    EventKind.ECN_MARK:
+        "telemetry: `ecn_marks` counter -> signals.ecn_rate -> QoS "
+        "controller admission pressure",
+    EventKind.BACKPRESSURE:
+        "tenant-facing pause notification (controller hysteresis gate); "
+        "drained via poll_events before the next submit",
+    EventKind.REQUEST_KILLED:
+        "telemetry: `killed` counter; serving kill/evict default kind",
+    EventKind.ADMITTED:
+        "tenant-facing ECTX-creation ack (engine_base.register_tenant)",
+    EventKind.EVICTED:
+        "tenant-facing ECTX teardown notice; controller.reset_tenant "
+        "clears AIMD state on the same boundary",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class Event:
     tenant: int

@@ -1,0 +1,33 @@
+"""Version shims for the jax distributed API surface.
+
+``jax.shard_map`` (whose replication-check kwarg is ``check_vma``) only
+exists on newer jax releases; older ones ship the same transform as
+``jax.experimental.shard_map.shard_map`` with the kwarg spelled
+``check_rep``.  Every shard_map call site in this repo and its tests
+goes through this wrapper so both spellings work unchanged.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+else:  # older jax: experimental module, kwarg named check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any jax version."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KWARG: check_vma})
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped mesh axis.  ``jax.lax.axis_size`` is
+    recent; ``psum(1, axis)`` is the old idiom and constant-folds to a
+    Python int, so either way the result can drive ``range()``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -15,12 +15,13 @@ reference.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.compat import shard_map
 
 
 def stage_params(params_stacked: Any, num_stages: int) -> Any:
@@ -86,7 +87,7 @@ def gpipe(apply_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
                           jnp.zeros_like(outputs)), axis)
         return outputs
 
-    pipelined = jax.shard_map(
+    pipelined = shard_map(
         _stage_fn, mesh=mesh,
         in_specs=(P(axis), P()),     # stage stacks sharded; x replicated
         out_specs=P(),

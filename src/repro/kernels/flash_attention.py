@@ -16,7 +16,6 @@ VMEM budget, leaving room for double buffering.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -132,7 +132,7 @@ def _serve_params_sds(model, cfg, mesh):
     """Serving weights are a bf16 copy of the fp32 training params."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
     from repro.distributed import sharding as SH
     params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pspecs = SH.param_pspecs(cfg, params_sds, mesh, "serve")
@@ -248,6 +248,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
                               - ma.alias_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):    # older jax wraps the dict in a list
+        ca = ca[0] if ca else {}
     # raw XLA numbers (while bodies counted ONCE — kept for reference)
     rec["cost_xla_once"] = {
         "flops": float(ca.get("flops", 0.0)),

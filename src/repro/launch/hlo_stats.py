@@ -19,7 +19,6 @@ Returns per-device totals (the module is the post-SPMD partitioned one).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -12,13 +12,13 @@ or pipeline stages (distributed/pipeline.py).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec, SHAPES
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.distributed import sharding as SH
 
 # v5e hardware constants used by the roofline analysis (benchmarks/roofline.py)

@@ -13,9 +13,8 @@ input_specs()/the data pipeline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

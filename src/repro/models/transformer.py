@@ -9,7 +9,7 @@ any trailing partial group are applied unscanned.  Each layer kind
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

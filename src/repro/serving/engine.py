@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import wlbvt as W
-from repro.core.accounting import TimeAveragedJain, jain_fairness
+from repro.core.accounting import TimeAveragedJain
 from repro.core.admission import AdmissionError
 from repro.core.engine_base import EngineBase
 from repro.core.events import Event, EventKind

@@ -10,7 +10,7 @@ owning tenant (the PMP analogue).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

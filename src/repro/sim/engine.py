@@ -352,7 +352,8 @@ class Simulator(EngineBase):
         fmq = self.fmqs[idx]
         wl: WorkloadModel = fmq.ectx.kernel
         payload = max(0, pkt.size_bytes - self.hw.header_bytes)
-        t0 = self.now + self.hw.dma_setup_cycles   # L2->L1 DMA, hides sched
+        # L2->L1 DMA, hides sched
+        t0 = self.now + self.hw.cycles_ns(self.hw.dma_setup_cycles)
         comp = wl.compute_cycles(payload)
         # watchdog budgets (shared clamp semantics: core/engine_base.py) —
         # the per-kernel cycle limit, then the tenant's remaining lifetime
@@ -368,7 +369,7 @@ class Simulator(EngineBase):
             nfrag = -(-io_bytes // self.frag.fragment_bytes)
             comp += self.frag.sw_overhead_cycles * nfrag
 
-        t_comp = t0 + comp
+        t_comp = t0 + self.hw.cycles_ns(comp)
 
         def fin(t_done: float, was_killed=killed, was_budget=budget_killed):
             self._finish_kernel(idx, pkt, t0, t_done, was_killed, payload,
@@ -396,7 +397,8 @@ class Simulator(EngineBase):
             st.served_payload_bytes += payload
             self.tel.inc("completed", idx)
             self.tel.inc("bytes_out", idx, payload)
-        st.record_kernel_time(self.now - (t_start - self.hw.dma_setup_cycles))
+        st.record_kernel_time(
+            self.now - (t_start - self.hw.cycles_ns(self.hw.dma_setup_cycles)))
         st.last_completion = self.now
         if self.record_completions:
             self._completions.append((idx, self.now))
@@ -475,7 +477,7 @@ class Simulator(EngineBase):
         i, frag, kind, cb = picked
         overhead = (self.frag.hw_overhead_cycles
                     if self.frag.mode == "hardware" else 0)
-        dur = frag.nbytes * ns_per_b + overhead
+        dur = frag.nbytes * ns_per_b + self.hw.cycles_ns(overhead)
         self.axi_busy = True
 
         def done():

@@ -612,7 +612,7 @@ class BatchedSimulator(Simulator):
         j = self._fifo[idx].popleft()
         self._fifo_len[idx] -= 1
         self.free_pus -= 1
-        t0 = self.now + self.hw.dma_setup_cycles
+        t0 = self.now + self.hw.cycles_ns(self.hw.dma_setup_cycles)
         comp = self._p_comp[j]
         # budget clamps, inlined on the python-float spend mirror —
         # identical op sequence to BudgetLedger.clamp_kernel/clamp_total
@@ -643,7 +643,7 @@ class BatchedSimulator(Simulator):
         self._s_payload[slot] = self._p_payload[j]
         self._s_io[slot] = io_bytes
         heapq.heappush(self._events,
-                       (t0 + comp, self._seq,
+                       (t0 + self.hw.cycles_ns(comp), self._seq,
                         K_SUBMIT if io_bytes else K_FIN, slot))
         self._seq += 1
 
@@ -685,7 +685,8 @@ class BatchedSimulator(Simulator):
             d = self._tc_dirty
             d["completed"] = d["bytes_out"] = True
         self._kt_pend[idx].append(
-            now - (self._s_t0[slot] - self.hw.dma_setup_cycles))
+            now - (self._s_t0[slot]
+                   - self.hw.cycles_ns(self.hw.dma_setup_cycles)))
         self._c_lastcomp[idx] = now
         if self.record_completions:
             self._completions.append((idx, now))
@@ -749,7 +750,7 @@ class BatchedSimulator(Simulator):
         i, frag, kind, cb = picked
         overhead = (self.frag.hw_overhead_cycles
                     if self.frag.mode == "hardware" else 0)
-        dur = frag.nbytes * ns_per_b + overhead
+        dur = frag.nbytes * ns_per_b + self.hw.cycles_ns(overhead)
         self.axi_busy = True
         heapq.heappush(self._events, (self.now + dur, self._seq, K_AXI,
                                       (i, frag, kind, cb)))

@@ -12,7 +12,7 @@ from repro.configs.osmosis_pspin import PSPIN
 
 @dataclasses.dataclass(frozen=True)
 class TracePacket:
-    time: float          # arrival, cycles (1 GHz -> ns)
+    time: float          # arrival, virtual ns (wire timing)
     tenant: int
     size: int            # bytes incl. header
 

@@ -12,7 +12,7 @@ Exact constants are estimates; every experiment compares policies under
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,11 +22,9 @@ scaling / failure recovery).  Data-pipeline state rides in index.json.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
-import tempfile
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 

@@ -16,10 +16,9 @@ A background prefetch thread keeps one batch ahead.
 """
 from __future__ import annotations
 
-import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -14,9 +14,7 @@ two dims (row/col accumulators), the HBM-budget choice for the 400B MoE.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,13 @@ works from ShapeDtypeStructs alone.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.distributed import sharding as SH
 from repro.models.registry import Model, build_model
 from repro.training import optimizer as OPT

@@ -1,0 +1,25 @@
+"""Known-bad EQ-event fixture.
+
+tests/test_analysis.py asserts the exact line of every finding — keep
+line numbers stable when editing.
+
+  COMPLETE  — fine (registered, emitted, consumed)
+  DROP      — line 13: empty consumer string in the registry
+  ORPHAN    — line 8: no registry entry; emitted but never consumed
+  GHOST     — line 9: no registry entry; never emitted anywhere
+  RETIRED   — line 14: stale registry row (not a declared member)
+"""
+
+
+class EventKind:
+    COMPLETE = 1
+    DROP = 2
+    ORPHAN = 3
+    GHOST = 4
+
+
+EVENT_DISPOSITIONS = {
+    EventKind.COMPLETE: "report: completion counters",
+    EventKind.DROP: "",
+    EventKind.RETIRED: "gone",
+}

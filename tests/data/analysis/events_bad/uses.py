@@ -1,0 +1,12 @@
+"""Emit/consume sites leaving ORPHAN unconsumed and GHOST unemitted."""
+from .kinds import EventKind
+
+
+def emit(push):
+    push(EventKind.COMPLETE)
+    push(EventKind.DROP)
+    push(EventKind.ORPHAN)
+
+
+def consume(ev):
+    return ev.kind == EventKind.COMPLETE

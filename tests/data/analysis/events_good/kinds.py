@@ -1,0 +1,12 @@
+"""Known-good EQ-event fixture: total registry, every kind emitted."""
+
+
+class EventKind:
+    COMPLETE = 1
+    DROP = 2
+
+
+EVENT_DISPOSITIONS = {
+    EventKind.COMPLETE: "report: completion counters",
+    EventKind.DROP: "telemetry: drop counter",
+}

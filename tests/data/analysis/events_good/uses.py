@@ -1,0 +1,13 @@
+"""Emit + consume sites for every kind declared in kinds.py."""
+from .kinds import EventKind
+
+
+def emit(push):
+    push(EventKind.COMPLETE)
+    push(EventKind.DROP)
+
+
+def consume(ev, table):
+    if ev.kind == EventKind.COMPLETE:
+        return table[EventKind.DROP]
+    return None

@@ -1,0 +1,26 @@
+"""Known-bad frozen-spec / fixed-shape fixture.
+
+tests/test_analysis.py asserts the exact line of every finding — keep
+line numbers stable when editing.
+"""
+
+
+def tweak(spec, scale):
+    spec.duration_us = spec.duration_us * scale   # line 9: frozen assign
+    return spec
+
+
+def bump(spec):
+    spec.num_tenants += 1                         # line 14: in-place
+
+
+def sneak(spec, value):
+    setattr(spec, "seed", value)                  # line 18: setattr
+    object.__setattr__(spec, "seed", value)       # line 19: __setattr__
+
+
+def collect(xp, values, mask):
+    idx = xp.nonzero(mask)                        # line 23: dynamic shape
+    picked = values[values > 0]                   # line 24: boolean mask
+    hot = xp.where(mask)                          # line 25: 1-arg where
+    return idx, picked, hot

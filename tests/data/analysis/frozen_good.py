@@ -1,0 +1,10 @@
+"""Known-good frozen-spec / fixed-shape fixture."""
+
+
+def evolve(spec, scale):
+    longer = spec.replace(duration_us=spec.duration_us * scale)
+    return longer
+
+
+def collect(xp, values, mask):
+    return xp.where(mask, values, 0.0).sum()

@@ -1,0 +1,44 @@
+"""Known-bad jit-purity fixture: one violation class per function.
+
+tests/test_analysis.py asserts the exact line of every finding — keep
+line numbers stable when editing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def inplace_at(x):
+    np.add.at(x, 0, 1.0)                    # line 13: in-place scatter
+    return x
+
+
+@jax.jit
+def subscript_store(x):
+    x = x + 1.0
+    x[0] = 2.0                              # line 20: subscript store
+    return x
+
+
+@jax.jit
+def mixes_numpy(x):
+    y = np.cumsum(x)                        # line 26: np in traced path
+    return jnp.asarray(y)
+
+
+@jax.jit
+def traced_branch(x):
+    if x.sum() > 0:                         # line 32: traced `if`
+        return x
+    return -x
+
+
+@jax.jit
+def dynamic_shape(x):
+    return jnp.nonzero(x)                   # line 38: dynamic shape
+
+
+@jax.jit
+def one_arg_where(x):
+    return jnp.where(x > 0)                 # line 43: 1-arg where

@@ -1,0 +1,32 @@
+"""Known-good jit-purity fixture: every allowed idiom in one file.
+
+These patterns must produce ZERO findings — they are the sanctioned
+kernel style (xp-generic, static config branches, host-constant math).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIST_GROWTH = 1.5
+
+
+def commit(xp, staged, totals, floor: float):
+    """xp-generic collector kernel: pure, fixed-shape, branch-free."""
+    if floor is None:                       # `is` test is trace-static
+        floor = 0.0
+    lo = np.log(HIST_GROWTH)                # host-constant math, allowed
+    mask = xp.where(staged > floor, 1.0, 0.0)
+    return totals + staged * mask + lo
+
+
+def eager_fast_path(xp, counts):
+    if xp is np:                            # sanctioned numpy guard
+        return np.cumsum(counts)
+    return xp.cumsum(counts)
+
+
+@jax.jit
+def doubled(x):
+    if x.ndim == 2:                         # shape metadata is static
+        return x * 2.0
+    return jnp.asarray(x + x)

@@ -1,0 +1,31 @@
+"""Known-bad time-unit flow fixture: one confusion class per function.
+
+tests/test_analysis.py asserts the exact line of every finding — keep
+line numbers stable when editing.
+"""
+
+
+def mixes_add(start_ns, timeout_us):
+    deadline = start_ns + timeout_us        # line 9: ns + us
+    return deadline
+
+
+def wrong_assign(duration_us):
+    duration_ns = duration_us               # line 14: us into *_ns name
+    return duration_ns
+
+
+def wrong_kwarg(run, window_ns):
+    run(window_us=window_ns)                # line 19: kwarg unit clash
+
+
+def bad_literal(report):
+    return report(time_unit="seconds")      # line 23: not in TIME_UNITS
+
+
+def bad_compare(t_ns, t_cycles):
+    return t_ns < t_cycles                  # line 27: cross-unit compare
+
+
+def bad_cycles_call(hw, lat_ns):
+    return hw.cycles_ns(lat_ns)             # line 31: cycles_ns on ns

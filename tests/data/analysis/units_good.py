@@ -1,0 +1,18 @@
+"""Known-good time-unit flow fixture: explicit conversions only."""
+
+
+def convert(duration_us, hw, comp_cycles):
+    duration_ns = duration_us * 1e3          # us -> ns
+    t_ns = hw.cycles_ns(comp_cycles)         # cycles -> ns
+    total_ns = duration_ns + t_ns            # ns + ns
+    back_us = total_ns / 1e3                 # ns -> us
+    return total_ns, back_us
+
+
+def wire(frag_bytes, ns_per_byte):
+    dur_ns = frag_bytes * ns_per_byte        # bytes * ns/byte -> ns
+    return dur_ns
+
+
+def whitelisted(report):
+    return report(time_unit="ns")

@@ -1,0 +1,232 @@
+"""Static-checker suite (repro.analysis): fixture findings with exact
+locations, the repo-wide run vs the checked-in baseline, and the CLI
+gate exit codes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import Baseline, RepoIndex, RULE_REGISTRY, run_rules
+from repro.analysis.check import BASELINE_NAME
+from repro.analysis.events import EventExhaustivenessRule
+from repro.analysis.frozen import FixedShapeRule, FrozenSpecRule
+from repro.analysis.purity import JitPurityRule
+from repro.analysis.units import TimeUnitFlowRule
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "data", "analysis")
+REPO_ROOT = os.path.dirname(HERE)
+
+
+def run_rule(rule, paths, root=FIXTURES):
+    index = RepoIndex.load(root, paths=paths, excludes=())
+    return rule.run(index)
+
+
+def locs(findings):
+    """(line, first-words-of-message) pairs, order-independent."""
+    return {(f.line, f.message.split(";")[0].split(" (")[0])
+            for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# pass 1: jit-purity
+# ---------------------------------------------------------------------------
+def test_purity_good_is_clean():
+    assert run_rule(JitPurityRule(scope=("*",)), ["purity_good.py"]) == []
+
+
+def test_purity_bad_exact_findings():
+    fs = run_rule(JitPurityRule(scope=("*",)), ["purity_bad.py"])
+    assert all(f.rule == "jit-purity" and f.severity == "error" for f in fs)
+    got = {(f.line, f.symbol) for f in fs}
+    assert got == {
+        (13, "inplace_at"),       # np.add.at in-place scatter
+        (13, "inplace_at"),       # (the bare np.add ref is also flagged)
+        (20, "subscript_store"),
+        (26, "mixes_numpy"),
+        (32, "traced_branch"),
+        (39, "dynamic_shape"),
+        (44, "one_arg_where"),
+    }
+    # line 13 carries both the in-place and the backend-mixing finding
+    assert len([f for f in fs if f.line == 13]) == 2
+    assert len(fs) == 7
+
+
+# ---------------------------------------------------------------------------
+# pass 2: time-unit flow
+# ---------------------------------------------------------------------------
+def test_units_good_is_clean():
+    assert run_rule(TimeUnitFlowRule(scope=("*",)), ["units_good.py"]) == []
+
+
+def test_units_bad_exact_findings():
+    fs = run_rule(TimeUnitFlowRule(scope=("*",)), ["units_bad.py"])
+    assert all(f.rule == "time-unit-flow" for f in fs)
+    assert locs(fs) == {
+        (9, "`+` mixes time units: ns and us"),
+        (14, "assigns a us value to `duration_ns`"),
+        (19, "keyword `window_us=` declares us but the value carries ns"),
+        (23, "time_unit='seconds' is not one of ['ns', 'steps']"),
+        (27, "`comparison` mixes time units: cycles and ns"),
+        (31, "cycles_ns() applied to a ns value"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pass 3: EQ-event exhaustiveness
+# ---------------------------------------------------------------------------
+def test_events_good_is_clean():
+    fs = run_rule(EventExhaustivenessRule(scope=("*",)), ["."],
+                  root=os.path.join(FIXTURES, "events_good"))
+    assert fs == []
+
+
+def test_events_bad_exact_findings():
+    fs = run_rule(EventExhaustivenessRule(scope=("*",)), ["."],
+                  root=os.path.join(FIXTURES, "events_bad"))
+    assert all(f.rule == "eq-event-exhaustiveness" for f in fs)
+    assert locs(fs) == {
+        (23, "EVENT_DISPOSITIONS[EventKind.DROP] must be a non-empty "
+             "string naming the consumer"),
+        (24, "EVENT_DISPOSITIONS lists EventKind.RETIRED, which is not a "
+             "declared member"),
+        (17, "EventKind.ORPHAN has no EVENT_DISPOSITIONS entry: declare "
+             "where this event is consumed"),
+        (17, "EventKind.ORPHAN is emitted but never consumed and has no "
+             "EVENT_DISPOSITIONS entry"),
+        (18, "EventKind.GHOST has no EVENT_DISPOSITIONS entry: declare "
+             "where this event is consumed"),
+        (18, "EventKind.GHOST is declared but never emitted"),
+    }
+    warnings = [f for f in fs if f.severity == "warning"]
+    assert [w.message.split(";")[0] for w in warnings] == \
+        ["EventKind.GHOST is declared but never emitted"]
+
+
+# ---------------------------------------------------------------------------
+# pass 4: frozen-spec + fixed-shape
+# ---------------------------------------------------------------------------
+def test_frozen_good_is_clean():
+    assert run_rule(FrozenSpecRule(scope=("*",)), ["frozen_good.py"]) == []
+    assert run_rule(FixedShapeRule(scope=("*",)), ["frozen_good.py"]) == []
+
+
+def test_frozen_bad_exact_findings():
+    fs = run_rule(FrozenSpecRule(scope=("*",)), ["frozen_bad.py"])
+    assert locs(fs) == {
+        (9, "assignment to frozen spec attribute `spec.duration_us`"),
+        (14, "in-place update of frozen spec attribute `spec.num_tenants`"),
+        (18, "setattr on frozen spec `spec`"),
+        (19, "`object.__setattr__` bypasses the frozen spec contract on "
+             "`spec`"),
+    }
+
+
+def test_fixed_shape_bad_exact_findings():
+    fs = run_rule(FixedShapeRule(scope=("*",)), ["frozen_bad.py"])
+    assert locs(fs) == {
+        (23, "`nonzero` allocates a data-dependent shape in a telemetry "
+             "collector kernel"),
+        (24, "boolean-mask indexing yields a data-dependent shape in a "
+             "telemetry collector kernel"),
+        (25, "one-argument `where` is data-dependent"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# repo-wide run must match the checked-in baseline
+# ---------------------------------------------------------------------------
+def test_repo_wide_run_matches_baseline():
+    index = RepoIndex.load(REPO_ROOT)
+    findings = run_rules(index)
+    baseline = Baseline.load(os.path.join(REPO_ROOT, BASELINE_NAME))
+    new, stale = baseline.diff(findings)
+    assert new == [], "un-baselined findings:\n" + "\n".join(
+        f.format() for f in new)
+    assert stale == [], f"stale baseline entries: {stale}"
+    # every pin needs a real, human-written justification
+    for key, just in baseline.entries.items():
+        assert just.strip() and not just.startswith("TODO"), (
+            f"baseline entry lacks a justification: {key}")
+
+
+def test_all_four_passes_registered():
+    assert set(RULE_REGISTRY) >= {"jit-purity", "time-unit-flow",
+                                  "eq-event-exhaustiveness", "frozen-spec",
+                                  "fixed-shape"}
+
+
+# ---------------------------------------------------------------------------
+# CLI gate: exit codes, --json, --fix-baseline round-trip
+# ---------------------------------------------------------------------------
+def _check_cli(*args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.check", *args],
+        capture_output=True, text=True, timeout=600, cwd=cwd, env=env)
+
+
+@pytest.fixture
+def violation_repo(tmp_path):
+    """A minimal repo with one deliberately-injected unit violation."""
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "clock.py").write_text(
+        "def deadline(start_ns, timeout_us):\n"
+        "    return start_ns + timeout_us\n")
+    return tmp_path
+
+
+def test_cli_gate_fails_on_injected_violation(violation_repo):
+    r = _check_cli("--json", "--root", str(violation_repo),
+                   cwd=str(violation_repo))
+    assert r.returncode == 1, r.stdout + r.stderr
+    payload = json.loads(r.stdout)
+    assert not payload["ok"]
+    (finding,) = payload["new"]
+    assert finding["rule"] == "time-unit-flow"
+    assert finding["path"] == "src/clock.py"
+    assert finding["line"] == 2
+    assert "mixes time units" in finding["message"]
+
+
+def test_cli_fix_baseline_round_trip(violation_repo):
+    # absorb the violation into the baseline...
+    r = _check_cli("--fix-baseline", "--root", str(violation_repo),
+                   cwd=str(violation_repo))
+    assert r.returncode == 0, r.stdout + r.stderr
+    baseline = json.loads((violation_repo / BASELINE_NAME).read_text())
+    (entry,) = baseline["entries"]
+    assert entry["justification"].startswith("TODO")
+    # ...after which the gate passes
+    r2 = _check_cli("--json", "--root", str(violation_repo),
+                    cwd=str(violation_repo))
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert json.loads(r2.stdout)["ok"]
+    # fixing the code makes the pin stale -> gate fails again
+    (violation_repo / "src" / "clock.py").write_text(
+        "def deadline(start_ns, timeout_us):\n"
+        "    return start_ns + timeout_us * 1e3\n")
+    r3 = _check_cli("--json", "--root", str(violation_repo),
+                    cwd=str(violation_repo))
+    assert r3.returncode == 1
+    assert json.loads(r3.stdout)["stale_baseline"]
+
+
+def test_cli_unknown_rule_exits_2(violation_repo):
+    r = _check_cli("--rule", "no-such-rule", "--root", str(violation_repo),
+                   cwd=str(violation_repo))
+    assert r.returncode == 2
+
+
+def test_cli_single_rule_filter(violation_repo):
+    r = _check_cli("--json", "--rule", "frozen-spec", "--root",
+                   str(violation_repo), cwd=str(violation_repo))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert json.loads(r.stdout)["findings"] == []

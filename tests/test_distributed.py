@@ -8,6 +8,7 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import collectives as C
+from repro.distributed.compat import shard_map
 from repro.distributed import compression as Q
 from repro.distributed import pipeline as PP
 
@@ -22,7 +23,7 @@ def test_collective_matmul_ag_matches_dense(host_mesh):
     w = jax.random.normal(k2, (d_in, d_out), jnp.float32)
     n = host_mesh.shape["model"]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(C.collective_matmul_ag, axis_name="model"),
         mesh=host_mesh,
         in_specs=(P(), P("model", None)),
@@ -40,7 +41,7 @@ def test_reduce_scatter_matmul_matches_dense(host_mesh):
 
     # row-parallel: contraction dim sharded on both operands; output
     # columns end up scattered over the axis
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(C.reduce_scatter_matmul, axis_name="model"),
         mesh=host_mesh,
         in_specs=(P(None, "model"), P("model", None)),
@@ -83,7 +84,7 @@ def test_compressed_psum_approximates_mean(host_mesh):
         comp, _ = Q.compress_with_feedback({"g": x}, {"g": jnp.zeros_like(x)})
         return Q.psum_compressed(comp, "data")["g"]
 
-    fn = jax.shard_map(body, mesh=host_mesh,
+    fn = shard_map(body, mesh=host_mesh,
                        in_specs=P("data"), out_specs=P("data"),
                        check_vma=False)
     got = fn(xs.reshape(n, -1)).reshape(n, -1)[0]

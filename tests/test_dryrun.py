@@ -108,4 +108,9 @@ def test_analyzer_scan_trip_counts():
     st = analyze(comp.as_text())
     dot_flops = 2 * 8 * 16 * 16 * 7
     assert dot_flops <= st["flops"] <= dot_flops * 1.2
-    assert (comp.cost_analysis() or {}).get("flops", 0) < dot_flops
+    # cost_analysis() returns a dict on new jax, a one-element list of
+    # dicts on older releases
+    cost = comp.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    assert (cost or {}).get("flops", 0) < dot_flops

@@ -12,6 +12,42 @@ from repro.sim.engine import Simulator
 from repro.configs.osmosis_pspin import PSPIN
 
 
+def test_clock_ghz_scales_cycle_costs():
+    """Regression for the cycles-vs-ns unit bug the static checker found:
+    hardware costs expressed in PU cycles (DMA setup, kernel compute,
+    fragmentation overhead) must pass through ``PsPINConfig.cycles_ns``
+    before touching the ns event clock.  Before the fix raw cycle counts
+    were added onto the clock, which was only correct at the default
+    1 GHz; a 2 GHz part must finish a compute-only kernel in exactly
+    half the virtual time."""
+    from repro.configs.osmosis_pspin import PsPINConfig
+    from repro.sim.fastpath import BatchedSimulator
+    from repro.sim.traffic import TracePacket
+
+    wl = spin_workload("spin", 2.0)            # pure compute, no IO
+    payload = 512 - PSPIN.header_bytes
+    cycles = PSPIN.dma_setup_cycles + wl.compute_cycles(payload)
+    for cls in (Simulator, BatchedSimulator):
+        done = {}
+        for ghz in (1.0, 2.0):
+            sim = cls(make_tenants([wl]), hw=PsPINConfig(clock_ghz=ghz),
+                      record_completions=True)
+            res = sim.run([TracePacket(0.0, 0, 512)])
+            (tenant, t_done), = res.completions
+            assert tenant == 0
+            done[ghz] = t_done
+        assert done[1.0] == pytest.approx(cycles)       # 1 cycle == 1 ns
+        assert done[2.0] == pytest.approx(cycles / 2.0)
+
+
+def test_cycles_ns_exact_at_default_clock():
+    """At 1 GHz the conversion is an exact ``* 1.0`` so historical
+    golden traces stay bit-identical."""
+    from repro.configs.osmosis_pspin import PsPINConfig
+    assert PSPIN.cycles_ns(13) == 13.0
+    assert PsPINConfig(clock_ghz=2.0).cycles_ns(13) == 6.5
+
+
 def test_fig9_wlbvt_fairer_than_rr():
     rr = run_congestor_victim_compute("rr", duration_us=80)
     wl = run_congestor_victim_compute("wlbvt", duration_us=80)
