@@ -22,12 +22,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (paper_figs, sched_cost, serving_fairness,
-                            sim_throughput, telemetry_overhead)
+                            sim_throughput, telemetry_overhead,
+                            trace_overhead)
     suite = dict(paper_figs.ALL)
     suite["sched_cost"] = sched_cost.run
     suite["serving_fairness"] = serving_fairness.run
     suite["telemetry_overhead"] = telemetry_overhead.run
     suite["sim_throughput"] = sim_throughput.run
+    suite["trace_overhead"] = trace_overhead.run
 
     names = [args.only] if args.only else list(suite)
     headlines = {}
@@ -63,7 +65,45 @@ def main(argv=None) -> int:
     with open(out, "w") as f:
         json.dump(merged, f, indent=1)
     print(f"\nwrote {out}")
+    _append_history(os.path.dirname(out), headlines)
     return 0
+
+
+def _append_history(results_dir: str, headlines: dict) -> None:
+    """Append this invocation's headlines to a timestamped history log
+    and print the numeric deltas against the previous entry, so CI perf
+    guards (and humans) see drift without diffing artifacts by hand."""
+    import datetime
+    path = os.path.join(results_dir, "history.jsonl")
+    prev = None
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                lines = [ln for ln in f if ln.strip()]
+            if lines:
+                prev = json.loads(lines[-1])
+        except (OSError, json.JSONDecodeError):
+            prev = None
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "headlines": headlines,
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    print(f"appended {path}")
+    if not prev:
+        return
+    print(f"--- delta vs previous entry ({prev.get('ts', '?')}):")
+    old = prev.get("headlines", {})
+    for name, head in headlines.items():
+        if name not in old or not isinstance(head, dict):
+            continue
+        for k, v in head.items():
+            ov = old[name].get(k)
+            if (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and isinstance(ov, (int, float))
+                    and not isinstance(ov, bool) and v != ov):
+                print(f"  {name}.{k}: {ov} -> {v} ({v - ov:+g})")
 
 
 if __name__ == "__main__":

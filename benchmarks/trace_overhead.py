@@ -1,0 +1,241 @@
+"""Trace-plane recording overhead: % of event-sim per-packet time.
+
+Times the flight recorder's actual per-packet work directly — the
+grant-time slot bookkeeping, the completion-time ``span_packet``
+staging, the per-round WLBVT provenance snapshot, the eager drop/reject
+rows, and the amortized vectorized ring commit — then scales each cost
+by the operation counts of a real ``fig9_congestor_victim`` run and
+pins the total against the directly-measured untraced wall time of the
+same run.  Direct timing is used instead of with/without run
+differencing for the same reason as ``benchmarks.telemetry_overhead``:
+the recording cost (a few µs per packet) is far below run-to-run
+wall-clock noise on a shared host.  A single differencing pair is still
+printed (``diff_check_pct``) as an informational cross-check; it is
+noisy and also picks up second-order cache/allocator interference, so
+it is not gated.
+
+    PYTHONPATH=src python -m benchmarks.trace_overhead [--smoke]
+
+``--smoke`` runs the reduced-size variant and exits nonzero if the
+enabled overhead exceeds the 8% budget or the disabled-path guard cost
+exceeds the 1% budget (CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+BUDGET_ENABLED_PCT = 8.0
+BUDGET_DISABLED_PCT = 1.0
+
+# `if self.trace is not None` guard sites crossed per processed packet
+# on the event datapath (_arrival, _dispatch, _pop_and_start,
+# _start_kernel, _finish_kernel)
+GUARD_SITES_PER_PACKET = 5
+
+
+def _short_spec():
+    from repro.api import get_scenario
+    spec = get_scenario("fig9_congestor_victim")
+    kw = {"duration_us": min(spec.duration_us, 60.0)}
+    if spec.horizon_us:
+        kw["horizon_us"] = min(spec.horizon_us, 60.0)
+    return spec.replace(**kw)
+
+
+def _run(trace: bool):
+    """(wall_s, runtime) for one short fig9 event-datapath run."""
+    from repro.api.runtime import make_runtime
+    spec = _short_spec()
+    rt = make_runtime(spec, "sim", trace=trace, datapath="event")
+    t0 = time.perf_counter()
+    rt.run(spec)
+    if trace:
+        rt.flush_trace()
+    return time.perf_counter() - t0, rt
+
+
+def _volumes():
+    """Operation counts of the reference run, from its own trace."""
+    from repro.telemetry import trace as TR
+    wall, rt = _run(trace=True)
+    tr = rt.trace
+    rows = tr.rows()
+    dec = tr.decision_rows()
+    stage = rows["stage"]
+    n_arr = int(np.sum(stage == TR.ST_ARRIVE))
+    n_eq = int(np.sum(stage == TR.ST_EQ))
+    n_rounds = int(np.sum(dec["kind"] == TR.K_PU_WLBVT))
+    s = tr.trace_summary()
+    num_pus = getattr(getattr(rt, "_sim", None), "hw", None)
+    num_pus = num_pus.num_pus if num_pus is not None else 8
+    return {
+        "arrivals": n_arr,
+        "completions": n_eq,
+        "wlbvt_rounds": n_rounds,
+        "eager_spans": max(0, n_arr - n_eq),
+        "span_rows": s["spans_recorded"],
+        "decision_rows": s["decisions_recorded"],
+        "num_tenants": tr.T,
+        "num_pus": num_pus,
+        "wall_on_s": wall,
+    }
+
+
+class _Pkt:
+    __slots__ = ("ecn", "arrival", "meta")
+
+    def __init__(self):
+        self.ecn = False
+        self.arrival = 0.0
+        self.meta = 0
+
+
+def _time_lifecycle(tr, P: int, iters: int) -> float:
+    """Per-completion recording cost: the event engine's arrival uid
+    bookkeeping + grant-time slot columns + completion ``span_packet``
+    staging, looped exactly as the call sites run it."""
+    free = list(range(P - 1, -1, -1))
+    s_uid = [0] * P
+    s_grant = [0.0] * P
+    s_tcomp = [0.0] * P
+    s_pkt = [None] * P
+    pkt = _Pkt()
+    uid = 0
+    killed = False
+    t0 = time.perf_counter()
+    for i in range(iters):
+        # arrival
+        pkt.meta = uid
+        uid += 1
+        # grant (_pop_and_start + _start_kernel)
+        slot = free.pop()
+        s_uid[slot] = pkt.meta
+        s_grant[slot] = 1.0
+        pkt.meta = slot
+        s_pkt[slot] = pkt
+        s_tcomp[slot] = 2.0
+        # completion (_finish_kernel)
+        tr.span_packet(s_uid[slot], 1, slot,
+                       5 if killed else 1,
+                       2 if pkt.ecn else 1,
+                       pkt.arrival, s_grant[slot], s_tcomp[slot], 3.0)
+        free.append(slot)
+    return (time.perf_counter() - t0) / iters
+
+
+def _time_rounds(tr, T: int, P: int, iters: int) -> float:
+    """Per-WLBVT-round provenance cost (single-pick common case)."""
+    from repro.core.wlbvt import WLBVTState
+    from repro.telemetry import trace as TR
+    st = WLBVTState.create(np.linspace(1.0, 4.0, T))
+    st.queue_len[:] = 2
+    st.bvt[:] = 3.0
+    pick = (min(1, T - 1),)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        TR.record_wlbvt_round(tr, float(i), st, pick, P, TR.K_PU_WLBVT)
+    return (time.perf_counter() - t0) / iters
+
+
+def _time_eager(tr, iters: int) -> float:
+    """Per-row cost of an eagerly staged drop/reject ARRIVE span."""
+    from repro.telemetry import trace as TR
+    t0 = time.perf_counter()
+    for i in range(iters):
+        tr.span(TR.ST_ARRIVE, i, 0, 1.0, 1.0, TR.D_DROP)
+    return (time.perf_counter() - t0) / iters
+
+
+def _time_guard(iters: int) -> float:
+    """Per-site cost of the disabled path: one attribute load plus an
+    ``is not None`` branch."""
+    pkt = _Pkt()
+    pkt.meta = None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        if pkt.meta is not None:
+            raise AssertionError
+    return (time.perf_counter() - t0) / iters
+
+
+def measure(smoke: bool = False):
+    from repro.telemetry.trace import TraceRecorder
+    vol = _volumes()
+    T, P = vol["num_tenants"], vol["num_pus"]
+    reps = 2 if smoke else 4
+    iters = 20000 if smoke else 50000
+
+    base = min(_run(trace=False)[0] for _ in range(reps))
+
+    t_life = t_round = t_eager = t_guard = float("inf")
+    commit_per_row = float("inf")
+    for _ in range(3):
+        tr = TraceRecorder(T, num_pus=P)
+        t_life = min(t_life, _time_lifecycle(tr, P, iters))
+        t_round = min(t_round, _time_rounds(tr, T, P, iters))
+        t_eager = min(t_eager, _time_eager(tr, iters // 4))
+        staged = tr._srows + tr._drows
+        t0 = time.perf_counter()
+        tr.commit()
+        commit_per_row = min(
+            commit_per_row, (time.perf_counter() - t0) / max(1, staged))
+        t_guard = min(t_guard, _time_guard(iters))
+
+    rows_per_run = vol["span_rows"] + vol["decision_rows"]
+    enabled_s = (vol["completions"] * t_life
+                 + vol["wlbvt_rounds"] * t_round
+                 + vol["eager_spans"] * t_eager
+                 + rows_per_run * commit_per_row)
+    disabled_s = vol["arrivals"] * GUARD_SITES_PER_PACKET * t_guard
+    diff_pct = 100.0 * (vol["wall_on_s"] - base) / base
+
+    head = {
+        "enabled_pct": round(100.0 * enabled_s / base, 2),
+        "disabled_pct": round(100.0 * disabled_s / base, 3),
+        "diff_check_pct": round(diff_pct, 2),   # noisy, informational
+        "lifecycle_us": round(t_life * 1e6, 3),
+        "wlbvt_round_us": round(t_round * 1e6, 3),
+        "commit_us_per_row": round(commit_per_row * 1e6, 4),
+        "baseline_us_per_completion":
+            round(base / max(1, vol["completions"]) * 1e6, 1),
+        "budget_enabled_pct": BUDGET_ENABLED_PCT,
+        "budget_disabled_pct": BUDGET_DISABLED_PCT,
+    }
+    head["within_budget"] = bool(
+        head["enabled_pct"] < BUDGET_ENABLED_PCT
+        and head["disabled_pct"] < BUDGET_DISABLED_PCT)
+    return vol, head
+
+
+def run(smoke: bool = False):
+    vol, head = measure(smoke=smoke)
+    rows = [("metric", "value")]
+    rows += [(k, v) for k, v in vol.items() if k != "wall_on_s"]
+    rows += [(k, v) for k, v in head.items()]
+    return rows, head
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run; nonzero exit if over budget")
+    args = ap.parse_args(argv)
+    rows, head = run(smoke=args.smoke)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(head)
+    if args.smoke and not head["within_budget"]:
+        print(f"FAIL: trace overhead enabled={head['enabled_pct']}% "
+              f"(budget {BUDGET_ENABLED_PCT}%) "
+              f"disabled={head['disabled_pct']}% "
+              f"(budget {BUDGET_DISABLED_PCT}%)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,12 +82,16 @@ class SimRuntime:
                  arb: str = "dwrr", fifo_capacity: int = 4096,
                  io_demand_weights=None, record_timeline: bool = False,
                  control_interval_ns: float = 8000.0,
-                 datapath: str = "event"):
+                 datapath: str = "event", trace: bool = False,
+                 trace_depth: int = 65536,
+                 trace_decision_depth: int = 8192):
         self._kw = dict(scheduler=scheduler, frag=frag, arb=arb,
                         fifo_capacity=fifo_capacity,
                         io_demand_weights=io_demand_weights,
                         record_timeline=record_timeline,
-                        control_interval_ns=control_interval_ns)
+                        control_interval_ns=control_interval_ns,
+                        trace=trace, trace_depth=trace_depth,
+                        trace_decision_depth=trace_decision_depth)
         self._datapath = datapath
         self._tenants: List[ECTX] = []
         self._controller = None
@@ -97,17 +101,19 @@ class SimRuntime:
         self.result = None            # last SimResult (deprecated surface)
 
     @classmethod
-    def from_spec(cls, spec: ScenarioSpec) -> "SimRuntime":
+    def from_spec(cls, spec: ScenarioSpec, **overrides) -> "SimRuntime":
         weights = None
         if spec.io_demand_weights == "demand":
             weights = _io_demand(spec)
-        return cls(scheduler=spec.scheduler, frag=spec.frag(),
-                   arb=spec.arbiter, fifo_capacity=spec.fifo_capacity,
-                   io_demand_weights=weights,
-                   record_timeline=spec.record_timeline,
-                   control_interval_ns=(spec.controller.interval_ns
-                                        if spec.controller else 8000.0),
-                   datapath=spec.datapath or "event")
+        kw = dict(scheduler=spec.scheduler, frag=spec.frag(),
+                  arb=spec.arbiter, fifo_capacity=spec.fifo_capacity,
+                  io_demand_weights=weights,
+                  record_timeline=spec.record_timeline,
+                  control_interval_ns=(spec.controller.interval_ns
+                                       if spec.controller else 8000.0),
+                  datapath=spec.datapath or "event")
+        kw.update(overrides)
+        return cls(**kw)
 
     # -- lifecycle ----------------------------------------------------------
     def create_tenant(self, tenant_id: int, slo: SLOPolicy, *,
@@ -176,6 +182,17 @@ class SimRuntime:
     def now(self) -> float:
         return self._seal().now
 
+    @property
+    def trace(self):
+        """The flight recorder, or None (tracing off / not sealed)."""
+        return self._sim.trace if self._sim is not None else None
+
+    def flush_trace(self) -> None:
+        """Flush in-flight trace state (open spans / queued packets)
+        into the recorder — call once after the run, before export."""
+        if self._sim is not None:
+            self._sim.trace_flush(self._sim.now)
+
     def poll_events(self, tenant_id: int) -> List[Event]:
         out = [e for e in self._events if e.tenant == tenant_id]
         self._events = [e for e in self._events if e.tenant != tenant_id]
@@ -230,6 +247,8 @@ class SimRuntime:
                     "served_payload_bytes": float(st.served_payload_bytes),
                 }))
         extras: dict = {}
+        if self.trace is not None:
+            extras["trace_summary"] = self.trace.trace_summary()
         events = _events_block(self._events, extras)
         names = {i: e.name for i, e in enumerate(self._tenants)}
         return RunReport(
@@ -348,6 +367,16 @@ class ServeRuntime:
     def now(self) -> float:
         return float(self.engine.step_count)
 
+    @property
+    def trace(self):
+        """The flight recorder, or None (tracing off)."""
+        return self.engine.trace
+
+    def flush_trace(self) -> None:
+        """Flush in-flight trace state (open spans / queued requests)
+        into the recorder — call once after the run, before export."""
+        self.engine.trace_flush(float(self.engine.step_count))
+
     def poll_events(self, tenant_id: int) -> List[Event]:
         mine = [e for e in self._events if e.tenant == tenant_id]
         self._events = [e for e in self._events if e.tenant != tenant_id]
@@ -427,6 +456,8 @@ class ServeRuntime:
                 **row)
         extras = {"decode_steps": m["decode_steps"],
                   "prefill_chunks": m["prefill_chunks"]}
+        if eng.trace is not None:
+            extras["trace_summary"] = eng.trace.trace_summary()
         events = _events_block(pending, extras)
         return RunReport(
             scenario=spec.name if spec else "",
@@ -468,7 +499,7 @@ def build_requests(spec: ScenarioSpec):
 def make_runtime(spec: ScenarioSpec, backend: str, *, executor=None,
                  **overrides) -> Runtime:
     if backend == "sim":
-        return SimRuntime.from_spec(spec)
+        return SimRuntime.from_spec(spec, **overrides)
     if backend == "serve":
         return ServeRuntime.from_spec(spec, executor=executor, **overrides)
     raise ValueError(f"unknown backend {backend!r} (want 'sim' or 'serve')")

@@ -157,7 +157,9 @@ class EngineBase:
 
     def __init__(self, max_tenants: int, *, shared_eq: bool,
                  eq_capacity: int = 4096, telemetry: bool = True,
-                 telemetry_backend: str = "numpy"):
+                 telemetry_backend: str = "numpy", trace: bool = False,
+                 trace_depth: int = 65536,
+                 trace_decision_depth: int = 8192, trace_pus: int = 0):
         from repro.telemetry import Telemetry
         T = max_tenants
         self.max_tenants = T
@@ -167,9 +169,28 @@ class EngineBase:
         self.eqhub = EQHub(shared=shared_eq, capacity=eq_capacity)
         self.tel = (Telemetry(T, backend=telemetry_backend)
                     if telemetry else None)
+        if trace:
+            from repro.telemetry.trace import TraceRecorder
+            self.trace: Optional["TraceRecorder"] = TraceRecorder(
+                T, num_pus=trace_pus, depth=trace_depth,
+                decision_depth=trace_decision_depth)
+        else:
+            self.trace = None
         self.controller = None
         self._ctrl_baseline = None
         self._admit = np.ones(T, bool)       # controller backpressure gate
+
+    # -- trace plane ---------------------------------------------------------
+    def trace_flush(self, t: float) -> None:
+        """Flush in-flight trace state at end of run: write every
+        still-open span with disposition OPEN and commit.  Engines
+        whose hot paths skip the open-span dict (the simulators record
+        whole lifecycles at completion) override this to walk their
+        queues and in-flight slots instead."""
+        if self.trace is None:
+            return
+        self.trace.flush_open(t)
+        self.trace.commit()
 
     # -- ECTX registry -------------------------------------------------------
     def register_tenant(self, e: ECTX, *, fmq_index: Optional[int] = None,

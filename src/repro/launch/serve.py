@@ -79,7 +79,8 @@ def main(argv=None) -> int:
         print(f"wrote {args.json}")
     if args.telemetry_report:
         from repro.telemetry import format_console
-        print(format_console(rt.engine.telemetry_report()))
+        print(format_console(rt.engine.telemetry_report(),
+                             time_unit=rep.time_unit))
     return 0
 
 

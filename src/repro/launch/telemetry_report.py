@@ -83,9 +83,9 @@ def main(argv=None) -> int:
            else _serving_report(args))
     print(f"surface={rep['surface']}  controller={args.controller}  "
           f"latency_unit={rep['latency_unit']}")
-    print(format_console(rep))
+    print(format_console(rep, time_unit=rep["latency_unit"]))
     if args.json:
-        dump_json(rep, args.json)
+        dump_json(rep, args.json, overwrite=True)  # explicit CLI target
         print(f"wrote {args.json}")
     return 0
 

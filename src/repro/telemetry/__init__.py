@@ -17,6 +17,10 @@ from repro.telemetry.signals import (SignalFrame, compute_signals,
 from repro.telemetry.controller import (ControlAction, QoSConfig,
                                         QoSController, apply_to_scheduler)
 from repro.telemetry.report import dump_json, format_console, tenant_report
+from repro.telemetry.trace import (DECISION_KINDS, DISPOSITIONS, REASONS,
+                                   STAGES, TraceRecorder, ring_scatter)
+from repro.telemetry.traceview import (console_waterfall, to_perfetto,
+                                       write_perfetto)
 
 __all__ = [
     "COUNTERS", "GAUGES", "C_IDX", "G_IDX", "HIST_BUCKETS", "RING_WINDOW",
@@ -25,4 +29,7 @@ __all__ = [
     "SignalFrame", "compute_signals", "wlbvt_service_debt",
     "ControlAction", "QoSConfig", "QoSController", "apply_to_scheduler",
     "dump_json", "format_console", "tenant_report",
+    "DECISION_KINDS", "DISPOSITIONS", "REASONS", "STAGES",
+    "TraceRecorder", "ring_scatter",
+    "console_waterfall", "to_perfetto", "write_perfetto",
 ]

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import os
 from typing import Dict, Optional
 
 import numpy as np
@@ -41,10 +42,29 @@ def tenant_report(tel, *, names: Optional[Dict[int, str]] = None,
     return out
 
 
-def format_console(report: dict) -> str:
+# columns holding times in the report's declared latency unit
+TIME_COLS = ("p50_latency", "p99_latency")
+
+
+def _latency_unit(report: dict, time_unit: Optional[str]) -> str:
+    # lazy import: api.report pulls telemetry for trace summaries
+    from repro.api.report import TIME_UNITS
+    unit = time_unit or report.get("latency_unit") or TIME_UNITS[0]
+    if unit not in TIME_UNITS:
+        raise ValueError(f"latency unit {unit!r} is not one of the "
+                         f"declared TIME_UNITS {TIME_UNITS}")
+    return unit
+
+
+def format_console(report: dict, *,
+                   time_unit: Optional[str] = None) -> str:
+    """Console table; time columns carry the declared unit
+    (``api.report.TIME_UNITS``) in their header, never bare numbers."""
+    unit = _latency_unit(report, time_unit)
     cols = ["arrivals", "completed", "killed", "drops", "ecn_marks",
             "p50_latency", "p99_latency"]
-    lines = [" tenant  " + "  ".join(f"{c:>12}" for c in cols)]
+    heads = [f"{c[:3]}({unit})" if c in TIME_COLS else c for c in cols]
+    lines = [" tenant  " + "  ".join(f"{h:>12}" for h in heads)]
     for t, row in sorted(report["tenants"].items()):
         label = row.get("name", f"tenant{t}")[:8]
         vals = "  ".join(f"{row[c]:>12.6g}" for c in cols)
@@ -55,6 +75,12 @@ def format_console(report: dict) -> str:
     return "\n".join(lines)
 
 
-def dump_json(report: dict, path: str) -> None:
+def dump_json(report: dict, path: str, *,
+              overwrite: bool = False) -> None:
+    """Write the report as JSON; refuses to clobber an existing file
+    unless ``overwrite=True``."""
+    if not overwrite and os.path.exists(path):
+        raise FileExistsError(
+            f"{path} exists; pass overwrite=True to replace it")
     with open(path, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)

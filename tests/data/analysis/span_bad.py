@@ -1,0 +1,20 @@
+"""Known-bad span-balance fixture: a leaked begin, a non-terminal
+abandon, an unmatched end, and a magic-number stage."""
+from repro.telemetry import trace as TR
+
+
+def admit(tr, uid, tenant, now):
+    tr.span_begin(TR.ST_PU, uid, tenant, now)      # never closed: leak
+
+
+def finish(tr, uid, now):
+    tr.span_end(TR.ST_DMA, uid, now)               # never opened here
+
+
+def give_up(tr, uid, tenant, now):
+    tr.span_begin(TR.ST_FMQ, uid, tenant, now)
+    tr.span_abandon(TR.ST_FMQ, uid, now, TR.D_OK)  # non-terminal disp
+
+
+def magic(tr, uid, tenant, now):
+    tr.span_begin(3, uid, tenant, now)             # numeric stage code

@@ -1,0 +1,24 @@
+"""Known-good span-balance fixture: every opened stage is closed or
+abandoned with a terminal disposition in this module."""
+from repro.telemetry import trace as TR
+
+
+def admit(tr, uid, tenant, now):
+    tr.span_begin(TR.ST_FMQ, uid, tenant, now)
+
+
+def grant(tr, uid, now, slot):
+    tr.span_end(TR.ST_FMQ, uid, now, TR.D_OK, pu=slot)
+
+
+def drop(tr, uid, now):
+    tr.span_abandon(TR.ST_FMQ, uid, now, TR.D_DROP)
+
+
+def kill(tr, uid, now):
+    tr.span_abandon(TR.ST_FMQ, uid, now, disp=TR.D_KILL)
+
+
+def complete(tr, uid, tenant, now):
+    # complete rows need no pairing
+    tr.span(TR.ST_EQ, uid, tenant, now, now)

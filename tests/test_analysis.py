@@ -13,6 +13,7 @@ from repro.analysis.check import BASELINE_NAME
 from repro.analysis.events import EventExhaustivenessRule
 from repro.analysis.frozen import FixedShapeRule, FrozenSpecRule
 from repro.analysis.purity import JitPurityRule
+from repro.analysis.spans import SpanBalanceRule
 from repro.analysis.units import TimeUnitFlowRule
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -138,6 +139,38 @@ def test_fixed_shape_bad_exact_findings():
 
 
 # ---------------------------------------------------------------------------
+# pass 5: trace span-balance
+# ---------------------------------------------------------------------------
+def test_spans_good_is_clean():
+    assert run_rule(SpanBalanceRule(scope=("*",)), ["span_good.py"]) == []
+
+
+def test_spans_bad_exact_findings():
+    fs = run_rule(SpanBalanceRule(scope=("*",)), ["span_bad.py"])
+    assert all(f.rule == "span-balance" for f in fs)
+    assert {(f.line, f.severity) for f in fs} == {
+        (7, "error"),    # span_begin(ST_PU) never closed: leaks to OPEN
+        (11, "warning"),  # span_end(ST_DMA) without a begin
+        (16, "error"),   # span_abandon with non-terminal D_OK
+        (20, "error"),   # numeric stage code defeats the pairing
+    }
+    by_line = {f.line: f.message for f in fs}
+    assert "leaks to flush_open" in by_line[7]
+    assert "without a span_begin" in by_line[11]
+    assert "D_DROP/D_REJECT/D_KILL, got D_OK" in by_line[16]
+    assert "must be an ST_* constant" in by_line[20]
+
+
+def test_spans_rule_skips_the_recorder_module():
+    # the recorder defines the API; its own internal span() calls are
+    # not client pairing sites
+    index = RepoIndex.load(REPO_ROOT,
+                           paths=["src/repro/telemetry/trace.py"],
+                           excludes=())
+    assert SpanBalanceRule().run(index) == []
+
+
+# ---------------------------------------------------------------------------
 # repo-wide run must match the checked-in baseline
 # ---------------------------------------------------------------------------
 def test_repo_wide_run_matches_baseline():
@@ -154,10 +187,10 @@ def test_repo_wide_run_matches_baseline():
             f"baseline entry lacks a justification: {key}")
 
 
-def test_all_four_passes_registered():
+def test_all_passes_registered():
     assert set(RULE_REGISTRY) >= {"jit-purity", "time-unit-flow",
                                   "eq-event-exhaustiveness", "frozen-spec",
-                                  "fixed-shape"}
+                                  "fixed-shape", "span-balance"}
 
 
 # ---------------------------------------------------------------------------

@@ -444,3 +444,32 @@ def test_recording_overhead_within_budget():
     from benchmarks.telemetry_overhead import BUDGET_PCT, measure
     step_s, commit_np, _ = measure(use_model=True, steps=24)
     assert 100.0 * commit_np / step_s < BUDGET_PCT
+
+def test_format_console_labels_time_columns():
+    from repro.telemetry import format_console
+    tel = Telemetry(2)
+    tel.inc("arrivals", 0, 3)
+    tel.lat(0, 40.0)
+    tel.commit()
+    rep = tenant_report(tel)
+    header = format_console(rep, time_unit="ns").splitlines()[0]
+    assert "p50(ns)" in header and "p99(ns)" in header
+    header = format_console(rep, time_unit="steps").splitlines()[0]
+    assert "p50(steps)" in header
+    # the report's own declared unit wins when none is passed
+    rep["latency_unit"] = "steps"
+    assert "p99(steps)" in format_console(rep).splitlines()[0]
+    with pytest.raises(ValueError):
+        format_console(rep, time_unit="seconds")
+
+
+def test_dump_json_refuses_to_clobber(tmp_path):
+    from repro.telemetry import dump_json
+    path = str(tmp_path / "report.json")
+    dump_json({"a": 1}, path)
+    with pytest.raises(FileExistsError):
+        dump_json({"a": 2}, path)
+    dump_json({"a": 2}, path, overwrite=True)
+    import json
+    with open(path) as fh:
+        assert json.load(fh) == {"a": 2}

@@ -1,0 +1,335 @@
+"""Trace plane (DESIGN.md §10): ring eviction semantics, tail readout,
+WLBVT decision replay fidelity vs a sequential reference, cross-backend
+provenance identity, span/latency reconciliation, and the Perfetto
+``trace_event`` export schema."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import sched_generic as G
+from repro.core import wlbvt as W
+from repro.telemetry import trace as TR
+from repro.telemetry.trace import TraceRecorder, record_wlbvt_round
+from repro.telemetry.traceview import (
+    PID_PU, PID_SCHED, PID_TENANTS, to_perfetto,
+)
+
+FULL_LIFECYCLE = (TR.ST_ARRIVE, TR.ST_FMQ, TR.ST_GRANT, TR.ST_PU,
+                  TR.ST_DMA, TR.ST_EQ)
+DROP_UID_BASE = 1_000_000
+
+
+def _flood(tr, n):
+    """n packet lifecycles (6 rows each) with an eager drop row every
+    10th packet, so packet records and plain rows interleave."""
+    for i in range(n):
+        t = float(i)
+        tr.span_packet(i, i % 3, i % 4, TR.D_OK, TR.D_OK,
+                       t, t + 1.0, t + 2.0, t + 2.5)
+        if i % 10 == 9:
+            tr.span(TR.ST_ARRIVE, DROP_UID_BASE + i, i % 3,
+                    t + 0.5, t + 0.5, TR.D_DROP)
+
+
+def _by_uid(rows):
+    """uid -> stage list, in retained write order."""
+    per = {}
+    for uid, stage in zip(rows["uid"].tolist(), rows["stage"].tolist()):
+        per.setdefault(uid, []).append(stage)
+    return per
+
+
+# ---------------------------------------------------------------------------
+# ring eviction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("commit_every", [7, None],
+                         ids=["incremental", "one-big-commit"])
+def test_ring_eviction_keeps_lifecycles_paired(commit_every):
+    depth = 64
+    tr = TraceRecorder(3, depth=depth, decision_depth=16)
+    ref = TraceRecorder(3, depth=1 << 16, decision_depth=16)
+    n = 50
+    for i in range(n):
+        for rec in (tr, ref):
+            t = float(i)
+            rec.span_packet(i, i % 3, i % 4, TR.D_OK, TR.D_OK,
+                            t, t + 1.0, t + 2.0, t + 2.5)
+            if i % 10 == 9:
+                rec.span(TR.ST_ARRIVE, DROP_UID_BASE + i, i % 3,
+                         t + 0.5, t + 0.5, TR.D_DROP)
+        if commit_every and i % commit_every == 0:
+            tr.commit()
+    rows = tr.rows()
+    total = n * 6 + n // 10
+    assert tr.span_count == total
+    assert len(rows["uid"]) == depth
+
+    # eviction == the newest `depth` rows of the unbounded stream
+    full = ref.rows()
+    for k in rows:
+        np.testing.assert_array_equal(rows[k], full[k][total - depth:],
+                                      err_msg=k)
+
+    # rows are written complete: no OPEN disposition, no negative spans
+    assert not np.any(rows["disp"] == TR.D_OPEN)
+    assert np.all(rows["t1"] >= rows["t0"])
+
+    # pairing: every retained lifecycle is a suffix of the full stage
+    # sequence, and only the oldest retained packet may be cut
+    per = _by_uid(rows)
+    partial = []
+    for uid, stages in per.items():
+        if uid >= DROP_UID_BASE:
+            assert stages == [TR.ST_ARRIVE]
+            continue
+        k = len(stages)
+        assert tuple(stages) == FULL_LIFECYCLE[6 - k:], uid
+        if k < 6:
+            partial.append(uid)
+    assert len(partial) <= 1
+    if partial:
+        assert partial[0] == min(u for u in per if u < DROP_UID_BASE)
+
+
+def test_tail_matches_rows_suffix():
+    tr = TraceRecorder(3, depth=128, decision_depth=16)
+    _flood(tr, 40)
+    rows = tr.rows()
+    m = len(rows["uid"])
+    for n in (0, 1, 10, m, m + 50):
+        t = tr.tail(n)
+        k = min(n, m)
+        for c in rows:
+            np.testing.assert_array_equal(t[c], rows[c][m - k:],
+                                          err_msg=f"tail({n}).{c}")
+
+
+# ---------------------------------------------------------------------------
+# WLBVT decision replay vs a sequential reference
+# ---------------------------------------------------------------------------
+def _reference_round(pre, picks, num_pus, cap):
+    """Replay one round pick-by-pick from the pre-round state with the
+    scheduler's own formulas (``sched_generic``)."""
+    ql = pre["queue_len"].copy()
+    co = pre["cur_occup"].copy()
+    prio = pre["prio"]
+    metric = G.tput(pre["total_occup"], pre["bvt"], np) / prio
+    out = []
+    for p in picks:
+        limit = G.pu_limit(prio, ql, num_pus, np)
+        elig = (ql > 0) & (co < limit)
+        if cap is not None:
+            elig = elig & (co < cap)
+        ne = int(elig.sum())
+        pmax = np.where(elig, prio, -np.inf).max()
+        reason = (TR.R_FORCED_SINGLE if ne <= 1 else
+                  TR.R_PRIORITY if prio[p] >= pmax else TR.R_DEBT)
+        out.append((p, reason, ne, float(metric[p]), elig.copy(),
+                    pre["bvt"].copy()))
+        ql[p] -= 1
+        co[p] += 1
+    return out
+
+
+def test_wlbvt_replay_matches_sequential_reference():
+    rng = np.random.RandomState(7)
+    for trial in range(30):
+        T = int(rng.randint(2, 6))
+        num_pus = int(rng.randint(2, 33))
+        cap = (rng.randint(1, 6, T).astype(np.float64)
+               if trial % 3 == 0 else None)
+        tr = TraceRecorder(T)
+        st = W.WLBVTState.create(rng.uniform(0.5, 4.0, T))
+        st.queue_len[:] = rng.randint(0, 8, T)
+        st.cur_occup[:] = rng.randint(0, 3, T)
+        st.total_occup[:] = rng.uniform(0.0, 50.0, T)
+        st.bvt[:] = rng.uniform(0.0, 30.0, T)
+        refs = []
+        for rnd in range(int(rng.randint(1, 6))):
+            pre = {f: getattr(st, f).copy() for f in
+                   ("prio", "queue_len", "cur_occup", "total_occup",
+                    "bvt")}
+            k = int(rng.randint(1, num_pus + 1))
+            picks = [int(p) for p in W.select_k(st, num_pus, k, cap=cap)
+                     if p >= 0]
+            record_wlbvt_round(tr, float(rnd), st, picks, num_pus,
+                               TR.K_PU_WLBVT, cap=cap)
+            refs.extend(_reference_round(pre, picks, num_pus, cap))
+            # perturb between rounds: arrivals, completions, time
+            st.queue_len += rng.randint(0, 4, T)
+            done = np.minimum(st.cur_occup, rng.randint(0, 3, T))
+            st.cur_occup -= done
+            W.advance(st, float(rng.uniform(0.0, 5.0)))
+        d = tr.decision_rows()
+        assert len(d["time"]) == len(refs), (trial, T, num_pus)
+        assert np.all(d["kind"] == TR.K_PU_WLBVT)
+        for i, (p, reason, ne, met, elig, bvt) in enumerate(refs):
+            ctx = (trial, i)
+            assert int(d["winner"][i]) == p, ctx
+            assert int(d["reason"][i]) == reason, ctx
+            assert int(d["n_elig"][i]) == ne, ctx
+            assert d["metric"][i] == pytest.approx(met), ctx
+            np.testing.assert_array_equal(d["elig"][i], elig,
+                                          err_msg=str(ctx))
+            np.testing.assert_allclose(d["snapshot"][i],
+                                       bvt.astype(np.float32),
+                                       err_msg=str(ctx))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: cross-backend identity + reconciliation
+# ---------------------------------------------------------------------------
+def _fig9_spec(duration_us=20.0):
+    from repro.api import get_scenario
+    spec = get_scenario("fig9_congestor_victim")
+    kw = {"duration_us": duration_us}
+    if spec.horizon_us:
+        kw["horizon_us"] = duration_us
+    return spec.replace(**kw)
+
+
+def _traced_run(spec, datapath):
+    from repro.api.runtime import make_runtime
+    rt = make_runtime(spec, "sim", trace=True, datapath=datapath)
+    rep = rt.run(spec)
+    rt.flush_trace()
+    return rep, rt.trace
+
+
+def _reconcile(rows):
+    """max |(FMQ+PU+DMA durations) - (EQ.t1 - ARRIVE.t0)| per packet."""
+    uids, inv = np.unique(rows["uid"], return_inverse=True)
+    n = len(uids)
+    dur = rows["t1"] - rows["t0"]
+    staged = np.isin(rows["stage"],
+                     (TR.ST_FMQ, TR.ST_PU, TR.ST_DMA))
+    sums = np.bincount(inv, np.where(staged, dur, 0.0), minlength=n)
+    t_arr = np.full(n, np.nan)
+    t_eq = np.full(n, np.nan)
+    am = rows["stage"] == TR.ST_ARRIVE
+    em = (rows["stage"] == TR.ST_EQ)
+    t_arr[inv[am]] = rows["t0"][am]
+    t_eq[inv[em]] = rows["t1"][em]
+    both = ~np.isnan(t_arr) & ~np.isnan(t_eq)
+    assert both.any()
+    return float(np.abs(sums[both] - (t_eq[both] - t_arr[both])).max())
+
+
+def test_cross_backend_provenance_identity():
+    """Same ScenarioSpec -> bit-identical span rows and the same
+    decision winner/reason sequence on the event loop vs the batched
+    datapath (the replay is engine-independent by construction)."""
+    spec = _fig9_spec()
+    _, tr_ev = _traced_run(spec, "event")
+    _, tr_ba = _traced_run(spec, "batched")
+    rows_ev, rows_ba = tr_ev.rows(), tr_ba.rows()
+    assert len(rows_ev["uid"]) > 0
+    for k in rows_ev:
+        np.testing.assert_array_equal(rows_ev[k], rows_ba[k], err_msg=k)
+    d_ev, d_ba = tr_ev.decision_rows(), tr_ba.decision_rows()
+    assert len(d_ev["time"]) > 0
+    for k in ("time", "kind", "winner", "reason", "n_elig", "metric",
+              "snapshot", "elig"):
+        np.testing.assert_array_equal(d_ev[k], d_ba[k], err_msg=k)
+
+
+def test_span_sums_reconcile_with_completion_latency():
+    _, tr = _traced_run(_fig9_spec(), "event")
+    assert _reconcile(tr.rows()) <= 1.0  # within 1 virtual-ns
+    # ARRIVE predates the grant: it must never carry a PU slot
+    rows = tr.rows()
+    assert np.all(rows["pu"][rows["stage"] == TR.ST_ARRIVE] == -1)
+
+
+def test_trace_summary_extras_and_off_parity():
+    """Tracing on adds exactly the ``trace_summary`` extras block and
+    changes no reported metric."""
+    from repro.api.runtime import make_runtime
+    spec = _fig9_spec()
+    rep_on, tr = _traced_run(spec, "event")
+    rt_off = make_runtime(spec, "sim", trace=False)
+    rep_off = rt_off.run(spec)
+    s = rep_on.extras["trace_summary"]
+    assert s["spans_recorded"] == tr.span_count
+    assert s["open_spans"] == 0
+    assert "trace_summary" not in rep_off.extras
+    assert rep_on.duration == rep_off.duration
+    assert rep_on.jain_pu == rep_off.jain_pu
+    for t in rep_off.tenants:
+        a, b = rep_on.tenants[t], rep_off.tenants[t]
+        assert (a.completed, a.killed, a.drops) == \
+               (b.completed, b.killed, b.drops)
+        assert a.p99_latency == b.p99_latency
+
+
+def test_serving_backend_trace_smoke():
+    """The serving engine shares the recorder seam: spans reconcile in
+    step units and WLBVT grants carry provenance."""
+    from repro.api import get_scenario
+    from repro.api.runtime import make_runtime
+    spec = get_scenario("qos_closed_loop")
+    rt = make_runtime(spec, "serve", trace=True)
+    rt.run(spec)
+    rt.flush_trace()
+    tr = rt.trace
+    assert tr.span_count > 0
+    assert _reconcile(tr.rows()) <= 1.0
+    kinds = set(tr.decision_rows()["kind"].tolist())
+    assert TR.K_PU_WLBVT in kinds
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+def _span_events(doc):
+    return [e for e in doc["traceEvents"]
+            if e["ph"] != "M" and e.get("cat") != "decision"]
+
+
+def test_perfetto_export_schema():
+    _, tr = _traced_run(_fig9_spec(), "event")
+    doc = to_perfetto(tr, time_unit="ns",
+                      tenant_names={0: "congestor", 1: "victim"})
+    json.dumps(doc)  # must be directly serializable
+    ev = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["spans_recorded"] == tr.span_count
+    for e in ev:
+        assert e["ph"] in ("M", "i", "X", "b", "e"), e
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+
+    # one named thread per PU slot and per tenant
+    threads = {(e["pid"], e["tid"]): e["args"]["name"] for e in ev
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {t for (p, t) in threads if p == PID_PU} == set(range(tr.P))
+    assert threads[(PID_TENANTS, 0)] == "congestor"
+    assert threads[(PID_TENANTS, 1)] == "victim"
+
+    # PU_EXEC rows render as complete events on the PU track
+    xs = [e for e in ev if e["ph"] == "X"]
+    assert xs
+    for e in xs:
+        assert e["pid"] == PID_PU and 0 <= e["tid"] < tr.P
+        assert e["dur"] >= 0.0
+
+    # async FMQ/DMA spans are begin/end balanced per packet id
+    from collections import Counter
+    b = Counter((e["cat"], e["id"]) for e in ev if e["ph"] == "b")
+    e_ = Counter((e["cat"], e["id"]) for e in ev if e["ph"] == "e")
+    assert b == e_
+
+    # every retained decision lands on the scheduler track
+    d = tr.decision_rows()
+    sched = [e for e in ev if e.get("cat") == "decision"]
+    assert len(sched) == len(d["time"])
+    assert all(e["pid"] == PID_SCHED and e["name"] in TR.REASONS
+               for e in sched)
+
+
+def test_perfetto_last_n_is_suffix_of_full_export():
+    _, tr = _traced_run(_fig9_spec(), "event")
+    full = _span_events(to_perfetto(tr, time_unit="ns"))
+    part = _span_events(to_perfetto(tr, time_unit="ns", last=500))
+    assert 0 < len(part) < len(full)
+    assert part == full[len(full) - len(part):]
