@@ -1,0 +1,171 @@
+"""Observability-plane overhead: % of event-sim wall time.
+
+Times the metrics bus's actual per-interval work directly — one full
+``observe_tick`` (telemetry snapshot, signal differencing, SLO audit,
+``BusFrame`` publish through a subscriber plus the OpenMetrics and
+JSONL sinks) on a real post-run simulator — then scales the cost by the
+observation-interval count of a reference ``qos_closed_loop`` run and
+pins the total against the directly-measured unobserved wall time of
+the same run.  Direct timing is used instead of with/without run
+differencing for the same reason as ``benchmarks.trace_overhead``: the
+per-interval cost is far below run-to-run wall noise on a shared host
+(a single differencing pair is still printed as ``diff_check_pct``,
+informational only).
+
+Two gates:
+
+  * enabled  — bus + audit + both exporters attached: < 5% of the
+    unobserved run wall.
+  * detached — nothing attached: the per-window ``observe_tick``
+    early-return (one call + one attribute check): < 1%.
+
+    PYTHONPATH=src python -m benchmarks.export_overhead [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+BUDGET_ENABLED_PCT = 5.0
+BUDGET_DETACHED_PCT = 1.0
+
+
+def _short_spec():
+    from repro.api import get_scenario
+    spec = get_scenario("qos_closed_loop")
+    return spec.replace(duration_us=min(spec.duration_us, 60.0))
+
+
+def _run(observed: bool, out_dir: str):
+    """(wall_s, runtime, frames) for one short qos_closed_loop run."""
+    from repro.api.runtime import make_runtime
+    from repro.telemetry.bus import MetricsBus
+    from repro.telemetry.export import attach_exporters
+    spec = _short_spec()
+    rt = make_runtime(spec, "sim", datapath="event")
+    om = None
+    if observed:
+        bus = MetricsBus()
+        om, _ = attach_exporters(bus, os.path.join(out_dir, "ref"))
+        bus.subscribe(name="bench")
+        rt.attach_bus(bus)
+    t0 = time.perf_counter()
+    rt.run(spec)
+    wall = time.perf_counter() - t0
+    if observed:
+        bus.close()
+    return wall, rt, (om.frames if om is not None else 0)
+
+
+def _time_enabled(rt, out_dir: str, iters: int) -> float:
+    """Per-interval cost of the fully-enabled path: one real
+    ``observe_tick`` on the post-run simulator — snapshot, signals,
+    audit, publish to one subscriber + OpenMetrics + JSONL sinks."""
+    import numpy as np
+    from repro.telemetry.bus import MetricsBus
+    from repro.telemetry.export import attach_exporters
+    from repro.telemetry.slo_audit import SLOAudit
+    sim = rt._sim
+    bus = MetricsBus()
+    attach_exporters(bus, os.path.join(out_dir, "bench"))
+    sub = bus.subscribe(name="bench")
+    sim.attach_bus(bus)
+    sim.attach_slo_audit(SLOAudit([0.0, 2000.0], time_unit="ns"))
+    kv = np.zeros(sim.tel.T)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        sim.observe_tick(t=float(i), prio=sim.st.prio,
+                         total_occup=sim.st.total_occup, bvt=sim.st.bvt,
+                         kv_pressure=kv)
+        if not (i & 0xFF):
+            sub.drain()              # as a live consumer would
+    dt = (time.perf_counter() - t0) / iters
+    bus.close()
+    sim.attach_bus(None)
+    sim.attach_slo_audit(None)
+    return dt
+
+
+def _time_detached(rt, iters: int) -> float:
+    """Per-window cost with nothing attached: the ``observe_tick``
+    call + early return."""
+    import numpy as np
+    sim = rt._sim
+    kv = np.zeros(sim.tel.T)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        sim.observe_tick(t=float(i), prio=sim.st.prio,
+                         total_occup=sim.st.total_occup, bvt=sim.st.bvt,
+                         kv_pressure=kv)
+    return (time.perf_counter() - t0) / iters
+
+
+def measure(smoke: bool = False):
+    reps = 2 if smoke else 4
+    iters = 300 if smoke else 1000
+    det_iters = 20000 if smoke else 50000
+    with tempfile.TemporaryDirectory() as tmp:
+        wall_on, _, frames = _run(True, tmp)
+        base = float("inf")
+        rt = None
+        for _ in range(reps):
+            w, rt, _ = _run(False, tmp)
+            base = min(base, w)
+        t_on = min(_time_enabled(rt, tmp, iters) for _ in range(3))
+        t_off = min(_time_detached(rt, det_iters) for _ in range(3))
+    spec = _short_spec()
+    windows = int(spec.duration_us * 1e3
+                  / rt._sim.io_window_ns) or 1
+    vol = {
+        "frames_per_run": frames,
+        "windows_per_run": windows,
+        "wall_on_s": wall_on,
+        "wall_off_s": base,
+    }
+    head = {
+        "enabled_pct": round(100.0 * frames * t_on / base, 2),
+        "detached_pct": round(100.0 * windows * t_off / base, 3),
+        "diff_check_pct": round(100.0 * (wall_on - base) / base, 2),
+        "observe_us": round(t_on * 1e6, 2),
+        "detached_ns": round(t_off * 1e9, 1),
+        "budget_enabled_pct": BUDGET_ENABLED_PCT,
+        "budget_detached_pct": BUDGET_DETACHED_PCT,
+    }
+    head["within_budget"] = bool(
+        head["enabled_pct"] < BUDGET_ENABLED_PCT
+        and head["detached_pct"] < BUDGET_DETACHED_PCT)
+    return vol, head
+
+
+def run(smoke: bool = False):
+    vol, head = measure(smoke=smoke)
+    rows = [("metric", "value")]
+    rows += [(k, round(v, 6) if isinstance(v, float) else v)
+             for k, v in vol.items()]
+    rows += [(k, v) for k, v in head.items()]
+    return rows, head
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run; nonzero exit if over budget")
+    args = ap.parse_args(argv)
+    rows, head = run(smoke=args.smoke)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(head)
+    if args.smoke and not head["within_budget"]:
+        print(f"FAIL: export overhead enabled={head['enabled_pct']}% "
+              f"(budget {BUDGET_ENABLED_PCT}%) "
+              f"detached={head['detached_pct']}% "
+              f"(budget {BUDGET_DETACHED_PCT}%)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,8 @@ from repro.analysis.framework import (  # noqa: F401
     Baseline, Finding, Module, RepoIndex, Rule, RULE_REGISTRY,
     register_rule, run_rules,
 )
-from repro.analysis import purity, units, events, frozen, spans  # noqa: F401
+from repro.analysis import (purity, units, events, frozen, spans,  # noqa: F401
+                            metrics_names)
 
 __all__ = [
     "Baseline", "Finding", "Module", "RepoIndex", "Rule", "RULE_REGISTRY",

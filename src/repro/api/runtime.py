@@ -54,6 +54,38 @@ class Runtime(Protocol):
     def report(self, spec: Optional[ScenarioSpec] = None) -> RunReport: ...
 
 
+def _build_audit(spec: ScenarioSpec, backend: str, num_tenants: int,
+                 time_unit: str):
+    """Materialize the spec's ``SLOAudit`` (or None).
+
+    ``spec.audit is None`` means auto: attach exactly when a QoS
+    controller with at least one live p99 target is configured — the
+    audit then watches the same targets the controller acts on, so
+    every closed-loop run gets alert -> intervention attribution for
+    free.  An explicit ``AuditSpec`` works without a controller too
+    (targets fall back to the raw ``TenantSpec.p99_target`` values)."""
+    a = spec.audit
+    if a is not None and not a.enabled:
+        return None
+    if spec.controller is not None:
+        targets = spec.controller.p99_targets(spec.tenants, backend,
+                                              num_tenants)
+    else:
+        targets = [0.0] * num_tenants
+        for i, t in enumerate(spec.tenants):
+            targets[i] = t.p99_target
+    if not any(targets):
+        return None
+    if a is None and spec.controller is None:
+        return None
+    from repro.telemetry.slo_audit import SLOAudit, SLOAuditConfig
+    cfg = SLOAuditConfig() if a is None else SLOAuditConfig(
+        objective=a.objective, fast_windows=a.fast_windows,
+        slow_windows=a.slow_windows, fast_burn=a.fast_burn,
+        slow_burn=a.slow_burn)
+    return SLOAudit(targets, config=cfg, time_unit=time_unit)
+
+
 def _events_block(events: List[Event], extras: dict) -> List[dict]:
     """Serialize EQ events (bounded; the total count is always recorded)."""
     extras["events_total"] = len(events)
@@ -95,6 +127,8 @@ class SimRuntime:
         self._datapath = datapath
         self._tenants: List[ECTX] = []
         self._controller = None
+        self._bus = None
+        self._audit = None
         self._sim = None
         self._events: List[Event] = []
         self._pending: List = []      # injected, not yet run packets
@@ -139,6 +173,20 @@ class SimRuntime:
             raise RuntimeError("attach_controller before the first run")
         self._controller = controller
 
+    def attach_bus(self, bus) -> None:
+        """Attach a ``MetricsBus``: the simulator publishes one
+        ``BusFrame`` per committed IO window (DESIGN.md §11.1)."""
+        self._bus = bus
+        if self._sim is not None:
+            self._sim.attach_bus(bus)
+
+    def attach_slo_audit(self, audit) -> None:
+        """Attach an ``SLOAudit``: burn-rate alerts land in the EQ
+        stream / trace plane and ``report().extras['slo_audit']``."""
+        self._audit = audit
+        if self._sim is not None:
+            self._sim.attach_slo_audit(audit)
+
     def _seal(self):
         if self._sim is None:
             from repro.sim.fastpath import build_simulator
@@ -147,6 +195,10 @@ class SimRuntime:
             self._sim = build_simulator(
                 self._tenants, datapath=self._datapath,
                 controller=self._controller, **self._kw)
+            if self._bus is not None:
+                self._sim.attach_bus(self._bus)
+            if self._audit is not None:
+                self._sim.attach_slo_audit(self._audit)
         return self._sim
 
     # -- clock + work -------------------------------------------------------
@@ -210,6 +262,10 @@ class SimRuntime:
                 base_weights=np.ones(T),
                 p99_targets=spec.controller.p99_targets(
                     spec.tenants, "sim", T)))
+        if self._audit is None:
+            audit = _build_audit(spec, "sim", len(spec.tenants), NS_UNIT)
+            if audit is not None:
+                self.attach_slo_audit(audit)
         self.inject(build_traces(spec, arrays=spec.datapath == "batched"))
         # horizon_us > 0: fixed measurement window (queued work is cut
         # off); default drains every queued event
@@ -249,6 +305,8 @@ class SimRuntime:
         extras: dict = {}
         if self.trace is not None:
             extras["trace_summary"] = self.trace.trace_summary()
+        if self._audit is not None:
+            extras["slo_audit"] = self._audit.summary()
         events = _events_block(self._events, extras)
         names = {i: e.name for i, e in enumerate(self._tenants)}
         return RunReport(
@@ -351,6 +409,14 @@ class ServeRuntime:
     def attach_controller(self, controller) -> None:
         self.engine.attach_controller(controller)
 
+    def attach_bus(self, bus) -> None:
+        """Attach a ``MetricsBus``: the engine publishes one
+        ``BusFrame`` per observation interval (steps)."""
+        self.engine.attach_bus(bus)
+
+    def attach_slo_audit(self, audit) -> None:
+        self.engine.attach_slo_audit(audit)
+
     # -- clock + work -------------------------------------------------------
     def inject(self, work: Sequence) -> None:
         for req in work:
@@ -400,6 +466,11 @@ class ServeRuntime:
                 base_weights=np.ones(T),
                 p99_targets=spec.controller.p99_targets(
                     spec.tenants, "serve", T)))
+        if self.engine.slo_audit is None:
+            audit = _build_audit(spec, "serve", self.ecfg.max_tenants,
+                                 STEPS_UNIT)
+            if audit is not None:
+                self.attach_slo_audit(audit)
         self.inject(build_requests(spec))
         if spec.serve.steps > 0:
             self.run_until(spec.serve.steps)
@@ -458,6 +529,8 @@ class ServeRuntime:
                   "prefill_chunks": m["prefill_chunks"]}
         if eng.trace is not None:
             extras["trace_summary"] = eng.trace.trace_summary()
+        if eng.slo_audit is not None:
+            extras["slo_audit"] = eng.slo_audit.summary()
         events = _events_block(pending, extras)
         return RunReport(
             scenario=spec.name if spec else "",

@@ -113,6 +113,21 @@ class ControllerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AuditSpec:
+    """SLO burn-rate audit knobs (telemetry/slo_audit.py, DESIGN.md
+    §11.3).  ``None`` on the scenario means *auto*: the audit attaches
+    whenever a QoS controller with live p99 targets is configured, so
+    every closed-loop run ships an ``extras['slo_audit']`` block."""
+    enabled: bool = True
+    objective: float = 0.9           # good-interval objective (budget =
+    #                                  1 - objective)
+    fast_windows: int = 2            # acute window, observation intervals
+    slow_windows: int = 8            # sustained window
+    fast_burn: float = 5.0           # alert thresholds (burn multiples)
+    slow_burn: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeSpec:
     """Serving-engine projection knobs (EngineConfig subset)."""
     max_slots: int = 8
@@ -143,6 +158,7 @@ class ScenarioSpec:
     io_demand_weights: str = "uniform"   # "uniform" | "demand"
     record_timeline: bool = False
     controller: Optional[ControllerSpec] = None
+    audit: Optional[AuditSpec] = None    # None = auto (see AuditSpec)
     seed: int = 0
     serve: ServeSpec = ServeSpec()
     analytic: str = ""               # "" | "ppb": computed, not simulated
@@ -173,6 +189,8 @@ class ScenarioSpec:
         d["backends"] = tuple(d.get("backends", ("sim",)))
         if d.get("controller") is not None:
             d["controller"] = ControllerSpec(**d["controller"])
+        if d.get("audit") is not None:
+            d["audit"] = AuditSpec(**d["audit"])
         if "serve" in d:
             d["serve"] = ServeSpec(**d["serve"])
         return cls(**d)

@@ -147,6 +147,9 @@ class EQHub:
 class EngineBase:
     """Backend-agnostic tenant machinery shared by every engine.
 
+    ``OBS_BACKEND`` labels the frames this engine publishes on the
+    metrics bus ("sim" | "serve" — the serving engine overrides it).
+
     Owns the ECTX registry (dense table + installed mask), the budget
     ledger, the EQ hub, the telemetry plane, the admission gate, and the
     QoS controller tick.  Subclasses (``sim.engine.Simulator``,
@@ -154,6 +157,8 @@ class EngineBase:
     only their execution semantics: *when* these mechanisms fire and
     what the data plane in between looks like.
     """
+
+    OBS_BACKEND = "sim"
 
     def __init__(self, max_tenants: int, *, shared_eq: bool,
                  eq_capacity: int = 4096, telemetry: bool = True,
@@ -179,6 +184,15 @@ class EngineBase:
         self.controller = None
         self._ctrl_baseline = None
         self._admit = np.ones(T, bool)       # controller backpressure gate
+        # streaming observability plane (DESIGN.md §11): a MetricsBus
+        # and/or SLO burn-rate audit attached via attach_bus /
+        # attach_slo_audit; observe_tick publishes one frame per
+        # backend observation interval against its own baseline (the
+        # controller's interval differencing is untouched)
+        self.bus = None
+        self.slo_audit = None
+        self._obs_baseline = None
+        self._obs_seq = 0
 
     # -- trace plane ---------------------------------------------------------
     def trace_flush(self, t: float) -> None:
@@ -223,6 +237,9 @@ class EngineBase:
             if self._ctrl_baseline is not None:
                 self._ctrl_baseline["counts"][tenant] = 0
                 self._ctrl_baseline["hist"][tenant] = 0
+            if self._obs_baseline is not None:
+                self._obs_baseline["counts"][tenant] = 0
+                self._obs_baseline["hist"][tenant] = 0
         return self.eqhub.retire(tenant)
 
     @property
@@ -235,12 +252,16 @@ class EngineBase:
 
     # -- QoS control loop ----------------------------------------------------
     def qos_tick(self, *, prio, total_occup, bvt, kv_pressure,
-                 knobs, installed: Optional[np.ndarray] = None) -> None:
+                 knobs, installed: Optional[np.ndarray] = None,
+                 t: float = 0.0) -> None:
         """One closed-loop controller interval (DESIGN.md §6): read the
         committed telemetry into a ``SignalFrame``, run the AIMD update,
         actuate the scheduler-weight ``knobs`` (``(live, base)`` pairs),
         and refresh the admission gate.  Call only when a controller is
-        attached and the backend's interval elapsed."""
+        attached and the backend's interval elapsed.  ``t`` is the
+        interval end in the backend's time unit; an attached SLO audit
+        uses it to attribute alerts to the interventions this tick
+        applies (which the trace plane also records)."""
         from repro.telemetry import apply_to_scheduler, compute_signals
         snap = self.tel.snapshot()
         sig = compute_signals(
@@ -249,5 +270,75 @@ class EngineBase:
             snap=snap)
         self._ctrl_baseline = snap
         act = self.controller.update(sig)
+        if self.slo_audit is not None:
+            new_ivs = self.slo_audit.note_intervention(t, act, installed)
+            if self.trace is not None and new_ivs:
+                from repro.telemetry.trace import record_qos_intervention
+                for iv in new_ivs:
+                    record_qos_intervention(self.trace, t, iv["tenant"],
+                                            iv["kind"], iv["value"])
         apply_to_scheduler(act, *knobs, installed=installed)
         self._admit = act.admit
+
+    # -- streaming observability (DESIGN.md §11) -----------------------------
+    def attach_bus(self, bus) -> None:
+        """Attach a ``telemetry.bus.MetricsBus``; ``observe_tick``
+        publishes one ``BusFrame`` per observation interval."""
+        self.bus = bus
+
+    def attach_slo_audit(self, audit) -> None:
+        """Attach a ``telemetry.slo_audit.SLOAudit``; ``observe_tick``
+        feeds it and pushes its alerts as ``SLO_ALERT`` EQ events."""
+        self.slo_audit = audit
+
+    def observe_tick(self, *, t: float, prio, total_occup, bvt,
+                     kv_pressure) -> None:
+        """One observation interval: difference the committed telemetry
+        against the observer baseline, run the SLO audit (alerts land
+        in the EQ stream and, when tracing, the decision ring), and
+        publish a ``BusFrame``.  No-op (one attribute check) with
+        nothing attached; reads only host-side committed state, so the
+        jit-safe commit path is untouched.  Backends call this *before*
+        any same-boundary ``qos_tick`` so an alert raised at the
+        boundary precedes the controller's intervention."""
+        if self.bus is None and self.slo_audit is None:
+            return
+        from repro.telemetry import compute_signals
+        snap = self.tel.snapshot()
+        sig = compute_signals(
+            self.tel, prio=prio, total_occup=total_occup, bvt=bvt,
+            kv_pressure=kv_pressure, baseline=self._obs_baseline,
+            snap=snap)
+        counts = snap["counts"]
+        interval_counts = (counts - self._obs_baseline["counts"]
+                           if self._obs_baseline is not None
+                           else counts.copy())
+        self._obs_baseline = snap
+        alerts = ()
+        if self.slo_audit is not None:
+            alerts = self.slo_audit.observe(
+                t=t, sig=sig, interval_counts=interval_counts)
+            for a in alerts:
+                self.eqhub.push(Event(
+                    a.tenant, EventKind.SLO_ALERT, t,
+                    detail=f"{a.window} burn={a.burn_rate:.3g} "
+                           f"p99={a.p99:.6g} target={a.target:.6g}"))
+            if self.trace is not None and alerts:
+                from repro.telemetry.trace import record_slo_alert
+                for a in alerts:
+                    record_slo_alert(self.trace, t, a.tenant, a.window,
+                                     a.burn_rate)
+        if self.bus is not None:
+            from repro.api.report import TIME_UNITS
+            from repro.telemetry.bus import BusFrame
+            sim_unit, step_unit = TIME_UNITS
+            self.bus.publish(BusFrame(
+                t=float(t), seq=self._obs_seq,
+                time_unit=(step_unit if self.OBS_BACKEND == "serve"
+                           else sim_unit),
+                backend=self.OBS_BACKEND,
+                signals=sig, counts=counts,
+                interval_counts=interval_counts,
+                weights=np.array(prio, float),
+                admit=self._admit.copy(), alerts=alerts))
+        self._obs_seq += 1

@@ -23,6 +23,7 @@ class EventKind(enum.Enum):
     REQUEST_KILLED = "request_killed"
     ADMITTED = "admitted"
     EVICTED = "evicted"
+    SLO_ALERT = "slo_alert"
 
 
 # Where each kind is consumed once it leaves the EQ.  Every member MUST
@@ -59,6 +60,10 @@ EVENT_DISPOSITIONS = {
     EventKind.EVICTED:
         "tenant-facing ECTX teardown notice; controller.reset_tenant "
         "clears AIMD state on the same boundary",
+    EventKind.SLO_ALERT:
+        "burn-rate SLO alert (telemetry/slo_audit.py): consumed by the "
+        "metrics bus / dashboard, the trace plane (alert->intervention "
+        "causality) and RunReport.extras['slo_audit']",
 }
 
 

@@ -36,13 +36,19 @@ def _parse_sets(pairs):
 
 
 def run_one(name: str, backend: str, params, *, arch: str = "",
-            smoke: bool = False, fast: bool = False):
+            smoke: bool = False, fast: bool = False,
+            export_dir: str = "", dash: bool = False):
     """Build + run one scenario; returns the validated RunReport.
 
     With ``arch`` (serve backend only), the registered spec's engine
     shape — via ``ServeRuntime.from_spec``, the single owner of the
     ServeSpec→EngineConfig mapping — also configures a real
     ``ModelExecutor`` data plane.
+
+    ``export_dir`` attaches the metrics bus with the OpenMetrics +
+    JSONL exporters (files ``<dir>/<name>.<backend>.om.txt`` and
+    ``.jsonl``); ``dash`` attaches the live terminal dashboard
+    (DESIGN.md §11).
     """
     from repro.api import get_scenario, run_scenario
     from repro.api.registry import scenario_params
@@ -63,6 +69,22 @@ def run_one(name: str, backend: str, params, *, arch: str = "",
         raise SystemExit(
             f"scenario {name!r} does not support backend {backend!r} "
             f"(supported: {', '.join(spec.backends)})")
+
+    bus = None
+    if (export_dir or dash) and not spec.analytic:
+        from repro.telemetry.bus import MetricsBus
+        bus = MetricsBus()
+        names = {i: t.name for i, t in enumerate(spec.tenants)}
+        if export_dir:
+            os.makedirs(export_dir, exist_ok=True)
+            from repro.telemetry.export import attach_exporters
+            attach_exporters(
+                bus, os.path.join(export_dir, f"{name}.{backend}"),
+                names=names)
+        if dash:
+            from repro.launch.dash import Dashboard
+            bus.add_sink(Dashboard(names=names))
+
     if backend == "serve" and arch and not spec.analytic:
         from repro.api import ServeRuntime
         from repro.configs import get_config, smoke_config
@@ -71,8 +93,18 @@ def run_one(name: str, backend: str, params, *, arch: str = "",
         rt = ServeRuntime.from_spec(
             spec, executor=lambda ecfg: ModelExecutor(
                 cfg, ecfg, rng_seed=spec.seed))
+    elif bus is not None:
+        from repro.api.runtime import make_runtime
+        rt = make_runtime(spec, backend)
+    else:
+        return run_scenario(spec, backend)
+    if bus is not None:
+        rt.attach_bus(bus)
+    try:
         return rt.run(spec).validate()
-    return run_scenario(spec, backend)
+    finally:
+        if bus is not None:
+            bus.close()
 
 
 def main(argv=None) -> int:
@@ -92,6 +124,13 @@ def main(argv=None) -> int:
                     help="override a scenario parameter (repeatable)")
     ap.add_argument("--json", default="",
                     help="dump the RunReport JSON to this path")
+    ap.add_argument("--export", default="", metavar="DIR",
+                    help="attach the metrics bus and write OpenMetrics "
+                         "(<scenario>.<backend>.om.txt) + JSONL exports "
+                         "into DIR")
+    ap.add_argument("--dash", action="store_true",
+                    help="live terminal dashboard during the run "
+                         "(plain ANSI; see repro.launch.dash)")
     ap.add_argument("--out-dir", default="",
                     help="with --all: write one RunReport JSON per run")
     ap.add_argument("--arch", default="",
@@ -144,7 +183,8 @@ def main(argv=None) -> int:
         raise SystemExit("scenario name required (or --list / --all)")
 
     rep = run_one(args.scenario, args.backend, params, arch=args.arch,
-                  smoke=args.smoke, fast=args.fast)
+                  smoke=args.smoke, fast=args.fast,
+                  export_dir=args.export, dash=args.dash)
     print(rep.summary())
     if rep.extras.get("analytic"):
         cols = rep.extras["columns"]

@@ -55,6 +55,10 @@ class EngineConfig:
     telemetry_backend: str = "numpy"  # "numpy" | "jnp" (jitted commits)
     qos_interval: int = 0             # steps between QoS control updates;
     #                                   0 = static weights (no control loop)
+    observe_interval: int = 0         # steps between metrics-bus frames;
+    #                                   0 = follow qos_interval (or 16
+    #                                   without a controller).  Only paid
+    #                                   when a bus/SLO audit is attached.
     trace: bool = False               # packet-lifecycle flight recorder
     trace_depth: int = 65536          # span ring depth (DESIGN.md §10)
     trace_decision_depth: int = 8192  # decision-provenance ring depth
@@ -111,6 +115,8 @@ class ModelExecutor:
 
 
 class Engine(EngineBase):
+    OBS_BACKEND = "serve"
+
     def __init__(self, ecfg: EngineConfig, executor=None):
         # tenant/budget/EQ/telemetry plumbing is the shared engine-core
         # layer (core/engine_base.py, DESIGN.md §8) — the same stack the
@@ -524,6 +530,13 @@ class Engine(EngineBase):
         gauges[G_IDX["kv_pressure"]] = self._kv_pressure()
         tel.commit()
         tel.commit_window(gauges)
+        obs_every = (self.cfg.observe_interval or self.cfg.qos_interval
+                     or 16)
+        if (self.step_count > 0 and self.step_count % obs_every == 0):
+            self.observe_tick(
+                t=float(self.step_count), prio=self.st.prio,
+                total_occup=self.st.total_occup, bvt=self.st.bvt,
+                kv_pressure=gauges[G_IDX["kv_pressure"]])
         if (self.controller is not None and self.cfg.qos_interval
                 and self.step_count > 0
                 and self.step_count % self.cfg.qos_interval == 0):
@@ -532,7 +545,8 @@ class Engine(EngineBase):
                 bvt=self.st.bvt, kv_pressure=gauges[G_IDX["kv_pressure"]],
                 knobs=((self.st.prio, self._prio_base),
                        (self.dwrr.weights, self._dwrr_base)),
-                installed=self._installed)
+                installed=self._installed,
+                t=float(self.step_count))
 
     def step(self) -> None:
         # R5: control traffic first

@@ -299,7 +299,9 @@ class Simulator(EngineBase):
 
     def _commit_window(self, occ: np.ndarray) -> None:
         """Flush staged telemetry + push gauge samples for one IO window;
-        run the QoS control loop every ``_ctrl_every`` windows."""
+        publish the observability frame, then run the QoS control loop
+        every ``_ctrl_every`` windows (observe-before-control, so a
+        boundary-coincident SLO alert precedes the intervention)."""
         self.tel.commit()
         if self.trace is not None:
             self.trace.maybe_commit()   # batched ring scatter (size-gated)
@@ -310,6 +312,11 @@ class Simulator(EngineBase):
         gauges[G_IDX["kv_pressure"]] = self._kv_pressure_row()
         self.tel.commit_window(gauges)
         self._win_count += 1
+        win_end_ns = self._win_start + self.io_window_ns
+        self.observe_tick(
+            t=win_end_ns, prio=self.st.prio,
+            total_occup=self.st.total_occup, bvt=self.st.bvt,
+            kv_pressure=gauges[G_IDX["kv_pressure"]])
         if (self.controller is not None
                 and self._win_count % self._ctrl_every == 0):
             pb, db, eb = self._sched_base
@@ -318,7 +325,8 @@ class Simulator(EngineBase):
                 bvt=self.st.bvt,
                 kv_pressure=gauges[G_IDX["kv_pressure"]],
                 knobs=((self.st.prio, pb), (self.dwrr.weights, db),
-                       (self.egress_dwrr.weights, eb)))
+                       (self.egress_dwrr.weights, eb)),
+                t=win_end_ns)
 
     # -- ingress -------------------------------------------------------------
     def _arrival(self, pkt: TracePacket) -> None:

@@ -6,6 +6,9 @@
 ``signals``    — derived congestion/SLO signals read by the control plane.
 ``controller`` — AIMD weight adaptation + hysteretic admission gate.
 ``report``     — per-tenant JSON/console reports.
+``bus``        — streaming metrics bus (bounded drop-oldest fan-out).
+``export``     — OpenMetrics / JSONL exporters over the bus.
+``slo_audit``  — per-tenant error budgets + burn-rate SLO alerts.
 """
 from repro.telemetry.metrics import (COUNTERS, GAUGES, C_IDX, G_IDX,
                                      HIST_BUCKETS, RING_WINDOW, Telemetry,
@@ -18,9 +21,15 @@ from repro.telemetry.controller import (ControlAction, QoSConfig,
                                         QoSController, apply_to_scheduler)
 from repro.telemetry.report import dump_json, format_console, tenant_report
 from repro.telemetry.trace import (DECISION_KINDS, DISPOSITIONS, REASONS,
-                                   STAGES, TraceRecorder, ring_scatter)
+                                   STAGES, TraceRecorder, ring_scatter,
+                                   record_slo_alert, record_qos_intervention)
 from repro.telemetry.traceview import (console_waterfall, to_perfetto,
                                        write_perfetto)
+from repro.telemetry.bus import BusFrame, MetricsBus, Subscription
+from repro.telemetry.export import (METRICS, MetricSpec, JsonlExporter,
+                                    OpenMetricsWriter, attach_exporters,
+                                    schema_lines)
+from repro.telemetry.slo_audit import (SLOAlert, SLOAudit, SLOAuditConfig)
 
 __all__ = [
     "COUNTERS", "GAUGES", "C_IDX", "G_IDX", "HIST_BUCKETS", "RING_WINDOW",
@@ -32,4 +41,9 @@ __all__ = [
     "DECISION_KINDS", "DISPOSITIONS", "REASONS", "STAGES",
     "TraceRecorder", "ring_scatter",
     "console_waterfall", "to_perfetto", "write_perfetto",
+    "record_slo_alert", "record_qos_intervention",
+    "BusFrame", "MetricsBus", "Subscription",
+    "METRICS", "MetricSpec", "JsonlExporter", "OpenMetricsWriter",
+    "attach_exporters", "schema_lines",
+    "SLOAlert", "SLOAudit", "SLOAuditConfig",
 ]

@@ -1,0 +1,360 @@
+"""OpenMetrics + JSONL exporters over the metrics bus (DESIGN.md §11.2).
+
+Every exported metric is declared once in ``METRICS`` as a literal
+``MetricSpec`` so the static checker (``repro.analysis.metrics_names``)
+can lint the whole surface without running anything: names are
+snake_case, every name ends in its declared unit suffix, the unit
+comes from the whitelist derived from the report schema's
+``TIME_UNITS`` single source of truth (plus the dimensionless
+suffixes), and no name+labelset is declared twice.  Counters follow the
+OpenMetrics convention (family ``osmosis_arrivals`` -> sample
+``osmosis_arrivals_total``); time-valued gauges exist once per declared
+time unit and the exporter picks the variant matching the run's
+backend, so a metric name never carries an ambiguous unit.
+
+Two sinks, both attachable to a ``MetricsBus``:
+
+  * ``JsonlExporter``     — streaming: one JSON object per ``BusFrame``
+    written at publish time.
+  * ``OpenMetricsWriter`` — scrape-style: tracks the latest frame and
+    renders one Prometheus/OpenMetrics text exposition at close.
+
+``python -m repro.telemetry.export --schema FILE [--golden GOLDEN]``
+prints (or diffs) the schema of an exposition file — metric names,
+types and label *keys* only, never values — which CI pins against
+``tests/data/openmetrics_schema.golden``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.report import TIME_UNITS
+from repro.telemetry.metrics import C_IDX
+
+# unit-suffix whitelist: the declared report time units + the
+# dimensionless suffixes the exporter uses
+DIMENSIONLESS_SUFFIXES = ("total", "ratio", "count")
+UNIT_SUFFIXES = TIME_UNITS + DIMENSIONLESS_SUFFIXES
+
+LABELS_TENANT = ("tenant", "backend")
+LABELS_GLOBAL = ("backend",)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One exported metric family (a literal row in ``METRICS``)."""
+    name: str                          # full sample name incl. unit suffix
+    kind: str                          # "counter" | "gauge"
+    unit: str                          # last name component; whitelisted
+    help: str
+    labels: Tuple[str, ...] = LABELS_TENANT
+
+    @property
+    def family(self) -> str:
+        """OpenMetrics family name (counters drop the _total suffix)."""
+        if self.kind == "counter" and self.name.endswith("_total"):
+            return self.name[:-len("_total")]
+        return self.name
+
+
+METRICS = (
+    # cumulative counters (from the committed counter matrix)
+    MetricSpec("osmosis_arrivals_total", "counter", "total",
+               "work items arrived (packets / requests)"),
+    MetricSpec("osmosis_completed_total", "counter", "total",
+               "work items completed"),
+    MetricSpec("osmosis_drops_total", "counter", "total",
+               "FMQ overflow drops"),
+    MetricSpec("osmosis_rejected_total", "counter", "total",
+               "admission-gate rejections (controller backpressure)"),
+    MetricSpec("osmosis_killed_total", "counter", "total",
+               "watchdog / budget kills"),
+    MetricSpec("osmosis_ecn_marks_total", "counter", "total",
+               "ECN-marked arrivals"),
+    MetricSpec("osmosis_bytes_in_total", "counter", "total",
+               "ingress bytes"),
+    MetricSpec("osmosis_bytes_out_total", "counter", "total",
+               "egress bytes"),
+    MetricSpec("osmosis_tokens_total", "counter", "total",
+               "generated tokens (serving backend)"),
+    MetricSpec("osmosis_slo_alerts_total", "counter", "total",
+               "burn-rate SLO alerts raised"),
+    # per-interval gauges (from the interval-differenced SignalFrame);
+    # time-valued gauges exist once per declared time unit
+    MetricSpec("osmosis_p50_sojourn_ns", "gauge", "ns",
+               "interval p50 sojourn latency (sim backend)"),
+    MetricSpec("osmosis_p50_sojourn_steps", "gauge", "steps",
+               "interval p50 sojourn latency (serving backend)"),
+    MetricSpec("osmosis_p99_sojourn_ns", "gauge", "ns",
+               "interval p99 sojourn latency (sim backend)"),
+    MetricSpec("osmosis_p99_sojourn_steps", "gauge", "steps",
+               "interval p99 sojourn latency (serving backend)"),
+    MetricSpec("osmosis_lat_samples_count", "gauge", "count",
+               "interval sojourn samples (0 = idle interval)"),
+    MetricSpec("osmosis_ecn_rate_ratio", "gauge", "ratio",
+               "interval ECN-marked fraction of arrivals"),
+    MetricSpec("osmosis_drop_rate_ratio", "gauge", "ratio",
+               "interval dropped fraction of arrivals"),
+    MetricSpec("osmosis_service_debt_ratio", "gauge", "ratio",
+               "WLBVT service debt (positive = underserved)"),
+    MetricSpec("osmosis_kv_pressure_ratio", "gauge", "ratio",
+               "KV quota / FIFO pressure"),
+    MetricSpec("osmosis_occupancy_count", "gauge", "count",
+               "windowed mean PU/slot occupancy"),
+    MetricSpec("osmosis_queue_depth_count", "gauge", "count",
+               "windowed mean backlog"),
+    MetricSpec("osmosis_sched_weight_ratio", "gauge", "ratio",
+               "live scheduler weight (base x AIMD boost)"),
+    MetricSpec("osmosis_admit_ratio", "gauge", "ratio",
+               "admission gate (1 = admitted, 0 = paused)"),
+    # engine-global gauges
+    MetricSpec("osmosis_jain_weighted_ratio", "gauge", "ratio",
+               "weighted Jain fairness over windowed occupancy",
+               labels=LABELS_GLOBAL),
+)
+
+SPECS_BY_NAME = {m.name: m for m in METRICS}
+
+# counter sample name -> committed counter column
+COUNTER_SOURCES = {
+    "osmosis_arrivals_total": "arrivals",
+    "osmosis_completed_total": "completed",
+    "osmosis_drops_total": "drops",
+    "osmosis_rejected_total": "rejected",
+    "osmosis_killed_total": "killed",
+    "osmosis_ecn_marks_total": "ecn_marks",
+    "osmosis_bytes_in_total": "bytes_in",
+    "osmosis_bytes_out_total": "bytes_out",
+    "osmosis_tokens_total": "tokens",
+}
+
+# signal attribute -> unitless gauge sample name
+SIGNAL_SOURCES = {
+    "lat_samples": "osmosis_lat_samples_count",
+    "ecn_rate": "osmosis_ecn_rate_ratio",
+    "drop_rate": "osmosis_drop_rate_ratio",
+    "service_debt": "osmosis_service_debt_ratio",
+    "kv_pressure": "osmosis_kv_pressure_ratio",
+    "occupancy_mean": "osmosis_occupancy_count",
+    "queue_mean": "osmosis_queue_depth_count",
+}
+
+
+def time_metric(base: str, time_unit: str) -> str:
+    """The time-suffixed variant of a declared metric family, e.g.
+    ``time_metric("osmosis_p99_sojourn", "ns")``.  Raises on a name
+    that is not in the registry (typos can't mint metrics)."""
+    name = f"{base}_{time_unit}"
+    if name not in SPECS_BY_NAME:
+        raise KeyError(f"{name} is not a declared metric")
+    return name
+
+
+def _active_tenants(frame) -> List[int]:
+    """Tenants with any committed activity, in id order."""
+    return [int(i) for i in
+            np.nonzero(frame.counts.sum(axis=1) > 0)[0]]
+
+
+def _tenant_label(names: Optional[Dict[int, str]], t: int) -> str:
+    return names[t] if names and t in names else f"tenant{t}"
+
+
+def frame_values(frame, names: Optional[Dict[int, str]] = None,
+                 alert_totals: Optional[Dict[int, int]] = None) -> list:
+    """Flatten one ``BusFrame`` into ``(metric_name, labels, value)``
+    rows — the single mapping both exporters (and the dashboard's JSON
+    mode) share, so they can never disagree on names."""
+    rows = []
+    sig = frame.signals
+    tenants = _active_tenants(frame)
+    p50_name = time_metric("osmosis_p50_sojourn", frame.time_unit)
+    p99_name = time_metric("osmosis_p99_sojourn", frame.time_unit)
+    for t in tenants:
+        labels = {"tenant": _tenant_label(names, t),
+                  "backend": frame.backend}
+        for mname, col in COUNTER_SOURCES.items():
+            rows.append((mname, labels, float(frame.counts[t, C_IDX[col]])))
+        rows.append(("osmosis_slo_alerts_total", labels,
+                     float((alert_totals or {}).get(t, 0))))
+        rows.append((p50_name, labels, float(sig.p50[t])))
+        rows.append((p99_name, labels, float(sig.p99[t])))
+        for attr, mname in SIGNAL_SOURCES.items():
+            rows.append((mname, labels, float(getattr(sig, attr)[t])))
+        rows.append(("osmosis_sched_weight_ratio", labels,
+                     float(frame.weights[t])))
+        rows.append(("osmosis_admit_ratio", labels,
+                     float(frame.admit[t])))
+    rows.append(("osmosis_jain_weighted_ratio",
+                 {"backend": frame.backend}, float(sig.jain_weighted)))
+    return rows
+
+
+def _fmt_labels(labels: Dict[str, str]) -> str:
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+class JsonlExporter:
+    """Streaming JSONL sink: one line per published frame."""
+
+    def __init__(self, path: str, *, names: Optional[Dict[int, str]] = None):
+        self.path = path
+        self.names = names
+        self._f = open(path, "w")
+        self._alert_totals: Dict[int, int] = {}
+        self.lines = 0
+
+    def on_frame(self, frame) -> None:
+        for a in frame.alerts:
+            self._alert_totals[a.tenant] = \
+                self._alert_totals.get(a.tenant, 0) + 1
+        metrics: Dict[str, Dict[str, float]] = {}
+        for mname, labels, value in frame_values(
+                frame, self.names, self._alert_totals):
+            metrics.setdefault(mname, {})[
+                labels.get("tenant", "_global")] = value
+        rec = {
+            "t": frame.t, "seq": frame.seq, "backend": frame.backend,
+            "time_unit": frame.time_unit,
+            "metrics": metrics,
+            "alerts": [{"tenant": _tenant_label(self.names, a.tenant),
+                        "window": a.window,
+                        "burn_rate": a.burn_rate, "p99": a.p99,
+                        "target": a.target} for a in frame.alerts],
+        }
+        self._f.write(json.dumps(rec, sort_keys=True) + "\n")
+        self.lines += 1
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class OpenMetricsWriter:
+    """Scrape-style sink: renders the latest frame as one
+    Prometheus/OpenMetrics text exposition at close (or on demand via
+    ``render``)."""
+
+    def __init__(self, path: str = "",
+                 *, names: Optional[Dict[int, str]] = None):
+        self.path = path
+        self.names = names
+        self._last = None
+        self._alert_totals: Dict[int, int] = {}
+        self.frames = 0
+
+    def on_frame(self, frame) -> None:
+        for a in frame.alerts:
+            self._alert_totals[a.tenant] = \
+                self._alert_totals.get(a.tenant, 0) + 1
+        self._last = frame
+        self.frames += 1
+
+    def render(self) -> str:
+        if self._last is None:
+            return "# EOF\n"
+        by_metric: Dict[str, list] = {}
+        for mname, labels, value in frame_values(
+                self._last, self.names, self._alert_totals):
+            by_metric.setdefault(mname, []).append((labels, value))
+        lines: List[str] = []
+        for spec in METRICS:               # declared order = stable output
+            samples = by_metric.get(spec.name)
+            if not samples:
+                continue
+            lines.append(f"# TYPE {spec.family} {spec.kind}")
+            if spec.unit not in DIMENSIONLESS_SUFFIXES:
+                lines.append(f"# UNIT {spec.family} {spec.unit}")
+            lines.append(f"# HELP {spec.family} {spec.help}")
+            for labels, value in samples:
+                lines.append(f"{spec.name}{_fmt_labels(labels)} {value:g}")
+        lines.append("# EOF")
+        return "\n".join(lines) + "\n"
+
+    def close(self) -> None:
+        if self.path:
+            with open(self.path, "w") as f:
+                f.write(self.render())
+
+
+def attach_exporters(bus, out_prefix: str,
+                     *, names: Optional[Dict[int, str]] = None) -> tuple:
+    """Attach both exporters to ``bus``; files land at
+    ``<out_prefix>.om.txt`` (OpenMetrics) and ``<out_prefix>.jsonl``."""
+    om = bus.add_sink(OpenMetricsWriter(out_prefix + ".om.txt",
+                                        names=names))
+    jl = bus.add_sink(JsonlExporter(out_prefix + ".jsonl", names=names))
+    return om, jl
+
+
+# ---------------------------------------------------------------------------
+# schema extraction (CI golden diff: names + label keys, never values)
+# ---------------------------------------------------------------------------
+def schema_lines(text: str) -> List[str]:
+    """The structural schema of an exposition: ``# TYPE``/``# UNIT``
+    lines verbatim plus ``name{label,keys}`` per distinct sample shape,
+    sorted and deduplicated."""
+    out = set()
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line == "# EOF" or line.startswith("# HELP"):
+            continue
+        if line.startswith("# TYPE") or line.startswith("# UNIT"):
+            out.add(line)
+            continue
+        if line.startswith("#"):
+            continue
+        sample = line.split(" ")[0]
+        if "{" in sample:
+            name, rest = sample.split("{", 1)
+            keys = sorted(kv.split("=")[0]
+                          for kv in rest.rstrip("}").split(",") if kv)
+            out.add(f"{name}{{{','.join(keys)}}}")
+        else:
+            out.add(sample)
+    return sorted(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="OpenMetrics exposition schema tool")
+    ap.add_argument("--schema", required=True,
+                    help="exposition file to extract the schema of")
+    ap.add_argument("--golden", default="",
+                    help="diff the schema against this golden file; "
+                         "nonzero exit on mismatch")
+    args = ap.parse_args(argv)
+    with open(args.schema) as f:
+        got = schema_lines(f.read())
+    if not args.golden:
+        for line in got:
+            print(line)
+        return 0
+    with open(args.golden) as f:
+        want = [ln for ln in (x.strip() for x in f) if ln]
+    missing = sorted(set(want) - set(got))
+    extra = sorted(set(got) - set(want))
+    for m in missing:
+        print(f"MISSING {m}")
+    for e in extra:
+        print(f"EXTRA   {e}")
+    if missing or extra:
+        print(f"schema mismatch: {len(missing)} missing, "
+              f"{len(extra)} extra (golden {args.golden})")
+        return 1
+    print(f"schema ok: {len(got)} entries match {args.golden}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,17 @@ from repro.telemetry import metrics as M
 
 @dataclasses.dataclass
 class SignalFrame:
-    """One control-interval reading of the telemetry plane."""
+    """One control-interval reading of the telemetry plane.
+
+    Zero-completion semantics (pinned): an interval in which a tenant
+    records no latency samples reads ``p50 == p99 == 0.0`` — never a
+    stale carry-forward of the previous interval and never NaN.  Any
+    real sample lands in a log2 bucket whose value is >= 1, so 0.0
+    uniquely encodes "no data"; ``lat_samples`` carries the per-tenant
+    interval sample count so consumers (the SLO burn-rate audit) can
+    tell an idle interval from a fast one and must not count it as a
+    latency violation.
+    """
     p50: np.ndarray
     p99: np.ndarray
     ecn_rate: np.ndarray
@@ -45,6 +55,8 @@ class SignalFrame:
     occupancy_mean: np.ndarray
     queue_mean: np.ndarray
     jain_weighted: float
+    lat_samples: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
 
     def as_dict(self) -> dict:
         return {f.name: getattr(self, f.name)
@@ -104,4 +116,5 @@ def compute_signals(tel, *, prio, total_occup, bvt,
         occupancy_mean=occ_mean,
         queue_mean=gmean[M.G_IDX["queue_len"]],
         jain_weighted=float(jain),
+        lat_samples=hist.sum(axis=1).astype(float),
     )

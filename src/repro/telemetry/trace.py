@@ -83,15 +83,22 @@ K_PU_RR = 1
 K_AXI_DWRR = 2
 K_EGRESS_DWRR = 3
 K_ADMISSION = 4
+K_SLO_ALERT = 5       # burn-rate SLO alert (telemetry/slo_audit.py)
+K_QOS_INTERVENE = 6   # controller actuation: AIMD weight / admission flip
 DECISION_KINDS = ("PU_WLBVT", "PU_RR", "AXI_DWRR", "EGRESS_DWRR",
-                  "ADMISSION")
+                  "ADMISSION", "SLO_ALERT", "QOS_INTERVENE")
 
 # reason codes (decision ring ``reason`` column)
 R_PRIORITY = 0        # winner was the highest-priority/-weight eligible
 R_DEBT = 1            # a lower-priority tenant won on lagging BVT/deficit
 R_FORCED_SINGLE = 2   # exactly one eligible tenant — no real choice
 R_ADMISSION_REJECT = 3
-REASONS = ("PRIORITY", "DEBT", "FORCED_SINGLE", "ADMISSION_REJECT")
+R_BURN_FAST = 4       # fast-window burn crossing (SLO_ALERT rows)
+R_BURN_SLOW = 5       # slow-window burn crossing (SLO_ALERT rows)
+R_AIMD_WEIGHT = 6     # QOS_INTERVENE: boost changed for the winner tenant
+R_ADMISSION_GATE = 7  # QOS_INTERVENE: admission gate flipped
+REASONS = ("PRIORITY", "DEBT", "FORCED_SINGLE", "ADMISSION_REJECT",
+           "BURN_FAST", "BURN_SLOW", "AIMD_WEIGHT", "ADMISSION_GATE")
 
 SPAN_RING_DEPTH = 65536
 DECISION_RING_DEPTH = 8192
@@ -600,6 +607,13 @@ class TraceRecorder:
         return {k: v[order] for k, v in self.decisions.items()}
 
     # -- summaries ---------------------------------------------------------
+    # keys of the trace_summary() extras block — RunReport.validate()
+    # checks the exported schema against this tuple
+    TRACE_SUMMARY_KEYS = (
+        "spans_recorded", "spans_retained", "span_depth",
+        "decisions_recorded", "decisions_retained", "decision_depth",
+        "open_spans", "stage_time_share", "decision_reasons",
+        "decision_kinds")
 
     def trace_summary(self) -> dict:
         """RunReport ``extras`` block: volumes, per-tenant stage time
@@ -719,3 +733,24 @@ def record_admission_reject(tr: TraceRecorder, now: float,
                             tenant: int) -> None:
     tr.decision(now, K_ADMISSION, int(tenant), R_ADMISSION_REJECT, 0,
                 0.0)
+
+
+def record_slo_alert(tr: TraceRecorder, now: float, tenant: int,
+                     window: str, burn_rate: float) -> None:
+    """SLO burn-rate alert row: Perfetto renders it on the Scheduler
+    track next to the QOS_INTERVENE rows it precedes, making the
+    alert -> intervention causality visible; ``metric`` carries the
+    burn rate."""
+    tr.decision(now, K_SLO_ALERT, int(tenant),
+                R_BURN_FAST if window == "fast" else R_BURN_SLOW, 0,
+                float(burn_rate))
+
+
+def record_qos_intervention(tr: TraceRecorder, now: float, tenant: int,
+                            kind: str, value: float) -> None:
+    """Controller actuation row (``kind``: the slo_audit intervention
+    kinds — aimd_weight / admission); ``metric`` carries the new boost
+    or gate value."""
+    tr.decision(now, K_QOS_INTERVENE, int(tenant),
+                R_AIMD_WEIGHT if kind == "aimd_weight" else R_ADMISSION_GATE,
+                0, float(value))

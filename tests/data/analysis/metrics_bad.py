@@ -1,0 +1,21 @@
+"""Fixture: malformed MetricSpec declarations (one finding per line
+noted below; exact locations pinned in tests/test_analysis.py)."""
+
+BAD = (
+    MetricSpec("OsmosisArrivals_total", "counter", "total",
+               "name is CamelCase"),                         # line 5
+    MetricSpec("osmosis_latency_seconds", "gauge", "seconds",
+               "unit outside the whitelist"),                # line 7
+    MetricSpec("osmosis_p99_sojourn_ns", "gauge", "steps",
+               "name does not end in the declared unit"),    # line 9
+    MetricSpec("osmosis_rate_ratio", "histogram", "ratio",
+               "kind outside counter/gauge"),                # line 11
+    MetricSpec("osmosis_drops_count", "counter", "count",
+               "counter without _total"),                    # line 13
+    MetricSpec("osmosis_arrivals_total", "counter", "total",
+               "first declaration"),                         # line 15
+    MetricSpec("osmosis_arrivals_total", "counter", "total",
+               "duplicate name + labelset"),                 # line 17
+    MetricSpec(DYNAMIC_NAME, "gauge", "ratio",
+               "name must be a literal"),                    # line 19
+)

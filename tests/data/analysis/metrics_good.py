@@ -1,0 +1,18 @@
+"""Fixture: well-formed MetricSpec declarations (no findings)."""
+
+LABELS_GLOBAL = ("backend",)
+
+METRICS = (
+    MetricSpec("osmosis_arrivals_total", "counter", "total",
+               "work items arrived"),
+    MetricSpec("osmosis_p99_sojourn_ns", "gauge", "ns",
+               "interval p99 sojourn (sim)"),
+    MetricSpec("osmosis_p99_sojourn_steps", "gauge", "steps",
+               "interval p99 sojourn (serve)"),
+    MetricSpec("osmosis_drop_rate_ratio", "gauge", "ratio",
+               "dropped fraction of arrivals"),
+    MetricSpec("osmosis_queue_depth_count", "gauge", "count",
+               "windowed mean backlog"),
+    MetricSpec("osmosis_jain_weighted_ratio", "gauge", "ratio",
+               "weighted Jain fairness", labels=LABELS_GLOBAL),
+)

@@ -13,6 +13,7 @@ from repro.analysis.check import BASELINE_NAME
 from repro.analysis.events import EventExhaustivenessRule
 from repro.analysis.frozen import FixedShapeRule, FrozenSpecRule
 from repro.analysis.purity import JitPurityRule
+from repro.analysis.metrics_names import MetricNamesRule
 from repro.analysis.spans import SpanBalanceRule
 from repro.analysis.units import TimeUnitFlowRule
 
@@ -171,6 +172,39 @@ def test_spans_rule_skips_the_recorder_module():
 
 
 # ---------------------------------------------------------------------------
+# pass 6: exported-metric names
+# ---------------------------------------------------------------------------
+def test_metrics_good_is_clean():
+    assert run_rule(MetricNamesRule(scope=("*",)),
+                    ["metrics_good.py"]) == []
+
+
+def test_metrics_bad_exact_findings():
+    fs = run_rule(MetricNamesRule(scope=("*",)), ["metrics_bad.py"])
+    assert all(f.rule == "metric-names" and f.severity == "error"
+               for f in fs)
+    by_line = {f.line: f.message for f in fs}
+    assert len(fs) == len(by_line) == 7
+    assert "not snake_case" in by_line[5]
+    assert "declares unit 'seconds'" in by_line[7]
+    assert "does not end in its declared unit suffix `_steps`" in by_line[9]
+    assert "kind 'histogram'" in by_line[11]
+    assert "must end `_total`" in by_line[13]
+    assert "duplicate metric 'osmosis_arrivals_total'" in by_line[17]
+    assert "must be string literals" in by_line[19]
+
+
+def test_metrics_rule_accepts_the_real_registry():
+    # the shipped exporter registry must satisfy its own lint (with the
+    # whitelist read from the real api/report.py TIME_UNITS)
+    index = RepoIndex.load(REPO_ROOT,
+                           paths=["src/repro/telemetry/export.py",
+                                  "src/repro/api/report.py"],
+                           excludes=())
+    assert MetricNamesRule().run(index) == []
+
+
+# ---------------------------------------------------------------------------
 # repo-wide run must match the checked-in baseline
 # ---------------------------------------------------------------------------
 def test_repo_wide_run_matches_baseline():
@@ -190,7 +224,8 @@ def test_repo_wide_run_matches_baseline():
 def test_all_passes_registered():
     assert set(RULE_REGISTRY) >= {"jit-purity", "time-unit-flow",
                                   "eq-event-exhaustiveness", "frozen-spec",
-                                  "fixed-shape", "span-balance"}
+                                  "fixed-shape", "span-balance",
+                                  "metric-names"}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,398 @@
+"""Streaming observability plane (DESIGN.md §11): metrics bus,
+SLO burn-rate audit, OpenMetrics/JSONL export, live dashboard.
+
+Pins the PR's acceptance property: in ``qos_closed_loop`` the victim's
+burn-rate SLO_ALERT fires *before* the controller's first AIMD weight
+intervention — visible in the EQ stream, the trace plane and
+``RunReport.extras['slo_audit']`` — bit-identically on the event-loop
+and batched sim datapaths.  Also pins the zero-completion interval
+semantics (an idle interval is never a violation) and the exported
+OpenMetrics schema against the checked-in goldens.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.telemetry.bus import BusFrame, MetricsBus
+from repro.telemetry.metrics import COUNTERS, C_IDX
+from repro.telemetry.signals import SignalFrame
+from repro.telemetry.slo_audit import SLOAlert, SLOAudit, SLOAuditConfig
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN_SIM = os.path.join(HERE, "data", "openmetrics_schema.sim.golden")
+GOLDEN_SERVE = os.path.join(HERE, "data",
+                            "openmetrics_schema.serve.golden")
+
+
+def _sig(T=2, p99=None, samples=None):
+    z = np.zeros(T)
+    return SignalFrame(
+        p50=z.copy(), p99=np.asarray(p99, float) if p99 is not None
+        else z.copy(),
+        ecn_rate=z.copy(), drop_rate=z.copy(), service_debt=z.copy(),
+        kv_pressure=z.copy(), occupancy_mean=z.copy(),
+        queue_mean=z.copy(), jain_weighted=1.0,
+        lat_samples=np.asarray(samples, float) if samples is not None
+        else z.copy())
+
+
+def _frame(t=0.0, seq=0, T=2, alerts=()):
+    counts = np.zeros((T, len(COUNTERS)), np.int64)
+    counts[:, C_IDX["arrivals"]] = 1
+    return BusFrame(t=t, seq=seq, time_unit="ns", backend="sim",
+                    signals=_sig(T), counts=counts,
+                    interval_counts=counts.copy(),
+                    weights=np.ones(T), admit=np.ones(T, bool),
+                    alerts=tuple(alerts))
+
+
+def _counts(T=2, arrivals=(0, 0), completed=(0, 0)):
+    c = np.zeros((T, len(COUNTERS)), np.int64)
+    c[:, C_IDX["arrivals"]] = arrivals
+    c[:, C_IDX["completed"]] = completed
+    return c
+
+
+# ---------------------------------------------------------------------------
+# metrics bus
+# ---------------------------------------------------------------------------
+def test_bus_drop_oldest_bounded_queue():
+    bus = MetricsBus()
+    sub = bus.subscribe(maxlen=3, name="slow")
+    for i in range(7):
+        bus.publish(_frame(t=float(i), seq=i))
+    assert len(sub) == 3
+    assert sub.dropped == 4 and sub.delivered == 7
+    assert [f.seq for f in sub.drain()] == [4, 5, 6]   # newest retained
+    assert bus.dropped == 4
+
+
+def test_bus_sinks_and_close():
+    class Sink:
+        def __init__(self):
+            self.frames, self.closed = [], False
+
+        def on_frame(self, fr):
+            self.frames.append(fr.seq)
+
+        def close(self):
+            self.closed = True
+
+    bus = MetricsBus()
+    s = bus.add_sink(Sink())
+    bus.publish(_frame(seq=0))
+    bus.publish(_frame(seq=1))
+    bus.close()
+    bus.close()                      # idempotent
+    assert s.frames == [0, 1] and s.closed
+    with pytest.raises(RuntimeError):
+        bus.publish(_frame(seq=2))
+
+
+def test_subscription_latest():
+    bus = MetricsBus()
+    sub = bus.subscribe(maxlen=4)
+    assert sub.latest() is None
+    for i in range(3):
+        bus.publish(_frame(seq=i))
+    assert sub.latest().seq == 2
+    assert len(sub) == 0             # latest() drains
+
+
+# ---------------------------------------------------------------------------
+# SLO audit: interval classification + burn-rate windows
+# ---------------------------------------------------------------------------
+def test_audit_idle_interval_is_never_a_violation():
+    # satellite regression: a zero-completion idle interval reads
+    # p99 == 0.0 with lat_samples == 0 and must count as good — burn
+    # windows never double-count idleness as violation
+    audit = SLOAudit([0.0, 100.0], config=SLOAuditConfig(
+        objective=0.9, fast_windows=2, slow_windows=4))
+    for i in range(6):
+        alerts = audit.observe(
+            t=float(i), sig=_sig(p99=[0.0, 0.0], samples=[0, 0]),
+            interval_counts=_counts())
+        assert alerts == ()
+    s = audit.summary()
+    assert s["alerts_total"] == 0
+    assert s["tenants"][1]["violating_intervals"] == 0
+    assert s["tenants"][1]["compliance_pct"] == 100.0
+    assert s["tenants"][1]["observed_intervals"] == 0   # idle != observed
+
+
+def test_audit_latency_violation_fires_fast_then_slow():
+    audit = SLOAudit([0.0, 100.0], config=SLOAuditConfig(
+        objective=0.9, fast_windows=2, slow_windows=4,
+        fast_burn=5.0, slow_burn=2.0))
+    bad = dict(sig=_sig(p99=[0.0, 250.0], samples=[0, 8]),
+               interval_counts=_counts(arrivals=(0, 8), completed=(0, 8)))
+    assert audit.observe(t=1.0, **bad) == ()          # window not full
+    alerts = audit.observe(t=2.0, **bad)              # 2/2 bad: burn 10
+    assert [a.window for a in alerts] == ["fast"]
+    a = alerts[0]
+    assert a.tenant == 1 and a.t == 2.0 and a.burn_rate == pytest.approx(10.0)
+    assert audit.observe(t=3.0, **bad) == ()          # rising edge only
+    alerts = audit.observe(t=4.0, **bad)              # slow window full
+    assert [a.window for a in alerts] == ["slow"]
+
+
+def test_audit_starvation_is_a_violation_and_alert_clears():
+    # fast_burn 6.0: one bad of two (burn 5.0) stays quiet, two of two
+    # (burn 10.0) fires — so the re-fire needs a fresh two-bad edge
+    audit = SLOAudit([100.0], config=SLOAuditConfig(
+        objective=0.9, fast_windows=2, slow_windows=2, fast_burn=6.0,
+        slow_burn=99.0))
+    starved = dict(sig=_sig(T=1, p99=[0.0], samples=[0]),
+                   interval_counts=_counts(T=1, arrivals=(5,),
+                                           completed=(0,)))
+    good = dict(sig=_sig(T=1, p99=[50.0], samples=[5]),
+                interval_counts=_counts(T=1, arrivals=(5,), completed=(5,)))
+    audit.observe(t=1.0, **starved)
+    alerts = audit.observe(t=2.0, **starved)
+    assert [a.window for a in alerts] == ["fast"]
+    audit.observe(t=3.0, **good)
+    audit.observe(t=4.0, **good)                      # alert state clears
+    alerts = audit.observe(t=5.0, **starved)
+    assert alerts == ()
+    alerts = audit.observe(t=6.0, **starved)          # re-fires on new edge
+    assert [a.window for a in alerts] == ["fast"]
+    s = audit.summary()
+    assert s["tenants"][0]["violation_windows"] == [[1.0, 2.0], [5.0, 6.0]]
+
+
+def test_audit_intervention_attribution():
+    class Act:
+        def __init__(self, boost, admit):
+            self.boost, self.admit = boost, admit
+
+    audit = SLOAudit([0.0, 100.0])
+    # first tick that moves a knob counts (neutral pre-state is
+    # unit boost / everyone admitted)
+    new = audit.note_intervention(8.0, Act(np.array([1.0, 1.5]),
+                                           np.array([True, True])))
+    assert new == [{"t": 8.0, "tenant": 1, "kind": "aimd_weight",
+                    "value": 1.5}]
+    new = audit.note_intervention(16.0, Act(np.array([1.0, 1.5]),
+                                            np.array([False, True])))
+    assert new == [{"t": 16.0, "tenant": 0, "kind": "admission",
+                    "value": 0.0}]
+    assert audit.note_intervention(24.0, Act(np.array([1.0, 1.5]),
+                                             np.array([False, True]))) == []
+    s = audit.summary()
+    assert s["interventions_total"] == 2
+    assert s["tenants"][1]["first_intervention_t"] == 8.0
+
+
+def test_signalframe_pins_zero_completion_interval():
+    # interval differencing: an interval with no new samples reads
+    # p50 == p99 == 0.0 and lat_samples == 0 even though cumulative
+    # telemetry still holds earlier samples
+    from repro.telemetry.metrics import Telemetry
+    from repro.telemetry.signals import compute_signals
+    tel = Telemetry(2)
+    tel.lat(0, 500.0)
+    tel.lat(0, 700.0)
+    tel.commit()
+    base = tel.snapshot()
+    sig = compute_signals(tel, prio=np.ones(2), total_occup=np.zeros(2),
+                          bvt=np.zeros(2), baseline=base)
+    assert sig.lat_samples[0] == 0 and sig.p99[0] == 0.0
+    # without the baseline the cumulative view still sees the samples
+    cum = compute_signals(tel, prio=np.ones(2), total_occup=np.zeros(2),
+                          bvt=np.zeros(2))
+    assert cum.lat_samples[0] == 2 and cum.p99[0] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: alert precedes the first AIMD intervention, on both
+# sim datapaths, bit-identically
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def qos_reports():
+    from repro.api import get_scenario
+    from repro.api.runtime import run_scenario
+    spec = get_scenario("qos_closed_loop", duration_us=120.0)
+    return {dp: run_scenario(spec.replace(datapath=dp), "sim")
+            for dp in ("event", "batched")}
+
+
+def test_alert_precedes_first_aimd_intervention(qos_reports):
+    rep = qos_reports["event"]
+    sa = rep.extras["slo_audit"]
+    victim = sa["tenants"]["1"]
+    assert victim["first_alert_t"] is not None
+    assert victim["first_intervention_t"] is not None
+    assert victim["first_alert_t"] < victim["first_intervention_t"]
+    assert victim["alert_lead"] > 0
+    # the alert is in the EQ stream, before any intervention time
+    eq_alerts = [e for e in rep.events if e["kind"] == "slo_alert"
+                 and e["tenant"] == 1]
+    assert eq_alerts and eq_alerts[0]["time"] == victim["first_alert_t"]
+    ivs = [iv for iv in sa["interventions"]
+           if iv["kind"] == "aimd_weight" and iv["tenant"] == 1]
+    assert ivs and eq_alerts[0]["time"] < ivs[0]["t"]
+
+
+def test_audit_bit_identical_across_datapaths(qos_reports):
+    a = qos_reports["event"].extras["slo_audit"]
+    b = qos_reports["batched"].extras["slo_audit"]
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    ae = [e for e in qos_reports["event"].events
+          if e["kind"] == "slo_alert"]
+    be = [e for e in qos_reports["batched"].events
+          if e["kind"] == "slo_alert"]
+    assert ae == be and ae
+
+
+def test_alert_and_intervention_land_in_trace(qos_reports):
+    from repro.api import get_scenario
+    from repro.api.runtime import make_runtime
+    from repro.telemetry.trace import K_QOS_INTERVENE, K_SLO_ALERT
+    from repro.telemetry.traceview import to_perfetto
+    spec = get_scenario("qos_closed_loop", duration_us=120.0)
+    rt = make_runtime(spec, "sim", trace=True)
+    rep = rt.run(spec)
+    rt.flush_trace()
+    d = rt.trace.decision_rows()
+    t_alert = d["time"][d["kind"] == K_SLO_ALERT]
+    t_iv = d["time"][d["kind"] == K_QOS_INTERVENE]
+    assert len(t_alert) and len(t_iv)
+    sa = rep.extras["slo_audit"]["tenants"]["1"]
+    assert float(t_alert.min()) == sa["first_alert_t"]
+    # Perfetto: alert + intervention threads render with reason names
+    evs = to_perfetto(rt.trace)["traceEvents"]
+    marks = {e["name"] for e in evs if e.get("ph") == "i"}
+    assert marks & {"BURN_FAST", "BURN_SLOW"}
+    assert "AIMD_WEIGHT" in marks
+
+
+# ---------------------------------------------------------------------------
+# cross-backend schema + report validation
+# ---------------------------------------------------------------------------
+def test_cross_backend_audit_schema_and_round_trip():
+    from repro.api import get_scenario, RunReport
+    from repro.api.runtime import run_scenario
+    from repro.telemetry.slo_audit import SUMMARY_KEYS
+    spec = get_scenario("qos_closed_loop", duration_us=80.0)
+    reps = {b: run_scenario(spec, b) for b in ("sim", "serve")}
+    schemas = {}
+    for b, rep in reps.items():
+        sa = rep.extras["slo_audit"]
+        assert tuple(sorted(sa)) == tuple(sorted(SUMMARY_KEYS))
+        assert sa["interval_unit"] == rep.time_unit
+        tenant_keysets = {tuple(sorted(row)) for row in
+                          sa["tenants"].values()}
+        assert len(tenant_keysets) == 1
+        schemas[b] = (tuple(sorted(sa)), tenant_keysets.pop())
+        # JSON round-trip preserves the audit block exactly
+        back = RunReport.from_json(rep.to_json())
+        assert back.extras["slo_audit"] == sa
+    assert schemas["sim"] == schemas["serve"]
+
+
+def test_report_validates_slo_audit_schema():
+    from repro.api import get_scenario
+    from repro.api.runtime import run_scenario
+    spec = get_scenario("qos_closed_loop", duration_us=60.0)
+    rep = run_scenario(spec, "sim")
+    rep.validate()
+    broken = dict(rep.extras["slo_audit"])
+    del broken["interval_unit"]
+    rep.extras["slo_audit"] = broken
+    with pytest.raises(ValueError, match="slo_audit missing"):
+        rep.validate()
+    broken = dict(rep.extras["slo_audit"])
+    broken["interval_unit"] = "steps"       # wrong unit for a sim report
+    rep.extras["slo_audit"] = broken
+    with pytest.raises(ValueError, match="interval_unit"):
+        rep.validate()
+
+
+def test_report_validates_trace_summary_schema():
+    from repro.api.report import RunReport
+    rep = RunReport(scenario="x", backend="sim", time_unit="ns",
+                    duration=1.0, scheduler="wlbvt", arbiter="dwrr",
+                    seed=0, jain_pu=1.0, jain_io=1.0,
+                    extras={"trace_summary": {"spans_recorded": 1}})
+    with pytest.raises(ValueError, match="trace_summary missing"):
+        rep.validate()
+
+
+# ---------------------------------------------------------------------------
+# exporters + golden schema
+# ---------------------------------------------------------------------------
+def test_openmetrics_schema_matches_golden(tmp_path):
+    from repro.launch.scenario import run_one
+    from repro.telemetry.export import schema_lines
+    run_one("qos_closed_loop", "sim", {}, fast=True,
+            export_dir=str(tmp_path))
+    om = tmp_path / "qos_closed_loop.sim.om.txt"
+    with open(om) as f:
+        got = schema_lines(f.read())
+    with open(GOLDEN_SIM) as f:
+        want = [ln for ln in (x.strip() for x in f) if ln]
+    assert got == want
+    # JSONL: streaming, one valid record per frame, stable names
+    jl = tmp_path / "qos_closed_loop.sim.jsonl"
+    lines = [json.loads(ln) for ln in open(jl)]
+    assert lines
+    assert [r["seq"] for r in lines] == list(range(len(lines)))
+    for r in lines:
+        assert r["backend"] == "sim" and r["time_unit"] == "ns"
+        assert "osmosis_p99_sojourn_ns" in r["metrics"]
+
+
+def test_export_cli_golden_gate(tmp_path):
+    from repro.launch.scenario import run_one
+    from repro.telemetry.export import main as export_main
+    run_one("serve_congestor_victim", "serve", {},
+            export_dir=str(tmp_path))
+    om = str(tmp_path / "serve_congestor_victim.serve.om.txt")
+    assert export_main(["--schema", om, "--golden", GOLDEN_SERVE]) == 0
+    assert export_main(["--schema", om, "--golden", GOLDEN_SIM]) == 1
+
+
+def test_exported_values_track_the_report(tmp_path):
+    from repro.launch.scenario import run_one
+    rep = run_one("qos_closed_loop", "sim", {}, fast=True,
+                  export_dir=str(tmp_path))
+    lines = [json.loads(ln)
+             for ln in open(tmp_path / "qos_closed_loop.sim.jsonl")]
+    last = lines[-1]["metrics"]
+    # cumulative counters in the last frame match the final report
+    assert last["osmosis_completed_total"]["victim"] == \
+        rep.tenants[1].completed
+    assert last["osmosis_arrivals_total"]["congestor"] == \
+        rep.tenants[0].arrivals
+
+
+# ---------------------------------------------------------------------------
+# dashboard
+# ---------------------------------------------------------------------------
+def test_dashboard_headless_render():
+    from repro.launch.dash import Dashboard, demo_frame, main
+    dash = Dashboard(names={0: "aggressor", 1: "victim"}, color=False)
+    frame = demo_frame()
+    dash.on_frame(frame)             # updates alert markers
+    text = dash.render(frame)
+    assert "victim" in text and "aggressor" in text
+    assert "!F" in text and "ALERT victim" in text
+    assert "\x1b[" not in text       # color off: plain text
+    assert main(["--headless"]) == 0
+
+
+def test_dashboard_as_bus_sink(capsys):
+    import io
+    from repro.launch.dash import Dashboard
+    out = io.StringIO()
+    bus = MetricsBus()
+    bus.add_sink(Dashboard(names={0: "a", 1: "b"}, out=out, color=False))
+    alert = SLOAlert(t=1.0, tenant=1, window="fast", burn_rate=10.0,
+                     p99=9.0, target=4.0)
+    bus.publish(_frame(seq=0))
+    bus.publish(_frame(seq=1, alerts=(alert,)))
+    bus.close()
+    text = out.getvalue()
+    assert "frame=1" in text and "alerts_total=1" in text
