@@ -1,0 +1,143 @@
+"""Fleet-plane throughput: the VOQ/crossbar fabric vs N independent NICs.
+
+Measures packets/second of an N-NIC fleet run (DESIGN.md §12) against
+the sum of N independent single-NIC runs processing the identical
+per-NIC tenant subsets — at *zero cross-traffic* (every tenant homed on
+its own ingress port), so the delta is pure fabric machinery: switch
+event processing, epoch-stepped co-simulation, and report merging.
+
+    PYTHONPATH=src python -m benchmarks.fleet_throughput [--smoke]
+
+``--smoke`` runs the reduced N=4 row only and exits nonzero if the
+fabric overhead exceeds the 15% perf guard (CI gate: the fleet plane
+must stay a thin layer over the per-NIC engines).  The full run adds
+the N=8 row and a scenarios/second sweep over the registered fleet
+scenario catalog.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+GUARD_MAX_OVERHEAD = 0.15        # CI smoke gate: fabric <15% over N NICs
+NIC_COUNTS = (4, 8)
+TENANTS_PER_NIC = 4
+
+
+def _specs(N: int, duration_us: float):
+    """(fleet_spec, [per-NIC single-NIC specs]): tenant i is homed on
+    NIC i%N (the default placement), so every fabric pair is (k, k) and
+    no output sees cross-traffic.  Each baseline NIC runs the *same*
+    dense tenant table the fleet engines carry (a migration target must
+    exist for every tenant on every NIC) with traffic only for its
+    placed tenants — so the delta is pure fabric machinery, not table
+    width."""
+    import dataclasses
+    from repro.api.spec import ArrivalSpec, ScenarioSpec, TenantSpec, WorkloadSpec
+    from repro.fleet.spec import FleetSpec
+    T = N * TENANTS_PER_NIC
+    tenants = tuple(
+        TenantSpec(f"t{i}",
+                   workload=WorkloadSpec(name=f"t{i}", compute_base=40.0,
+                                         compute_per_byte=1.0),
+                   arrival=ArrivalSpec(size=512, share=0.03, seed_offset=i))
+        for i in range(T))
+    fleet = FleetSpec(name="fleet_bench", tenants=tenants, num_nics=N,
+                      datapath="batched", duration_us=duration_us)
+    subs = [ScenarioSpec(
+        name=f"nic{k}",
+        tenants=tuple(t if i % N == k else dataclasses.replace(
+            t, arrival=dataclasses.replace(t.arrival, share=1e-9))
+            for i, t in enumerate(tenants)),
+        datapath="batched", duration_us=duration_us)
+        for k in range(N)]
+    return fleet, subs
+
+
+def _measure(N: int, duration_us: float, *, reps: int = 3):
+    """(n_packets, fleet_s, baseline_s) for one NIC count; the arms are
+    timed interleaved ``reps`` times, min taken per arm — host noise
+    otherwise dominates the single-digit-percent overhead ratio."""
+    from repro.api import run_scenario
+    from repro.fleet import run_fleet
+    fleet, subs = _specs(N, duration_us)
+    run_fleet(fleet, validate=False)               # warm both arms
+    for s in subs:
+        run_scenario(s, "sim", validate=False)
+    fleet_s = base_s = float("inf")
+    rep = None
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        rep = run_fleet(fleet, validate=False)
+        fleet_s = min(fleet_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for s in subs:
+            run_scenario(s, "sim", validate=False)
+        base_s = min(base_s, time.perf_counter() - t0)
+    n = sum(r.arrivals for r in rep.tenants.values())
+    return n, fleet_s, base_s
+
+
+def _scenario_sweep(fast: bool):
+    """Wall-clock over the registered fleet scenario catalog (both
+    acceptance arms of fleet_migrate) -> (n_scenarios, seconds)."""
+    from repro.api import get_scenario
+    from repro.fleet import run_fleet
+    runs = [("fleet_fabric", {}), ("fleet_incast", {}),
+            ("fleet_migrate", {"migrate": True}),
+            ("fleet_migrate", {"migrate": False})]
+    t0 = time.perf_counter()
+    for name, kw in runs:
+        spec = get_scenario(name, **kw)
+        if fast:
+            spec = spec.replace(duration_us=min(spec.duration_us, 60.0))
+        run_fleet(spec, validate=False)
+    return len(runs), time.perf_counter() - t0
+
+
+def run(*, smoke: bool = False, duration_us: float = 0.0):
+    """(rows, headline) in the benchmarks.run harness convention."""
+    if not duration_us:
+        duration_us = 120.0 if smoke else 400.0
+    counts = (4,) if smoke else NIC_COUNTS
+    rows = [("N", "packets", "fleet_pkts_per_s", "baseline_pkts_per_s",
+             "overhead_frac")]
+    head = {}
+    for N in counts:
+        n, fleet_s, base_s = _measure(N, duration_us)
+        overhead = fleet_s / base_s - 1.0
+        rows.append((N, n, round(n / fleet_s), round(n / base_s),
+                     round(overhead, 3)))
+        head[f"fleet_pkts_per_s_N{N}"] = round(n / fleet_s)
+        head[f"overhead_frac_N{N}"] = round(overhead, 3)
+    n_sc, sweep_s = _scenario_sweep(fast=smoke)
+    rows.append(("catalog", n_sc, "-", "-", round(sweep_s, 2)))
+    head["scenarios_per_sec"] = round(n_sc / sweep_s, 2)
+    head["guard_max_overhead"] = GUARD_MAX_OVERHEAD
+    head["guard_ok"] = bool(head[f"overhead_frac_N{counts[0]}"]
+                            < GUARD_MAX_OVERHEAD)
+    return rows, head
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=4 only, short run; nonzero exit if fabric "
+                         f"overhead >= {GUARD_MAX_OVERHEAD:.0%}")
+    ap.add_argument("--duration-us", type=float, default=0.0)
+    args = ap.parse_args(argv)
+    rows, head = run(smoke=args.smoke, duration_us=args.duration_us)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(head)
+    if args.smoke and not head["guard_ok"]:
+        print(f"FAIL: fleet fabric overhead "
+              f"{head['overhead_frac_N4']:.1%} >= "
+              f"{GUARD_MAX_OVERHEAD:.0%} guard at N=4 zero cross-traffic")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

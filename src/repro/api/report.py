@@ -172,6 +172,16 @@ class RunReport:
                        if k not in ts]
             if missing:
                 raise ValueError(f"trace_summary missing keys {missing}")
+        fl = self.extras.get("fleet")
+        if fl is not None:
+            from repro.fleet.engine import FLEET_EXTRAS_KEYS
+            missing = [k for k in FLEET_EXTRAS_KEYS if k not in fl]
+            if missing:
+                raise ValueError(f"fleet extras missing keys {missing}")
+            if len(fl["per_nic"]) != fl["num_nics"]:
+                raise ValueError(
+                    f"fleet per_nic has {len(fl['per_nic'])} reports "
+                    f"for {fl['num_nics']} NICs")
 
     # -- console ------------------------------------------------------------
     def summary(self) -> str:

@@ -583,6 +583,12 @@ def run_scenario(spec: ScenarioSpec, backend: str = "sim", *,
     """Run a declarative scenario on either backend -> ``RunReport``."""
     if spec.analytic:
         return _run_analytic(spec)
+    from repro.fleet.spec import FleetSpec
+    if isinstance(spec, FleetSpec):
+        # multi-NIC scenarios run the fleet engine (N per-NIC sims over
+        # the modeled switch) and return the aggregated report
+        from repro.fleet.engine import run_fleet
+        return run_fleet(spec, backend, validate=validate)
     rt = make_runtime(spec, backend, executor=executor)
     rep = rt.run(spec)
     return rep.validate() if validate else rep

@@ -210,10 +210,16 @@ def fleet_sweep(*, tenants: int = 128, duration_us: float = 10240.0,
                 pkt_size: int = 512, fifo_capacity: int = 256,
                 congestor_every: int = 4, watchdog_cycles: int = 20000,
                 seed: int = 0) -> ScenarioSpec:
-    """Tenant-fleet scale sweep (DESIGN.md §8): ``tenants`` flows share
-    the fully-utilized 400G link against 32 PUs — a deliberately
-    overloaded fleet (SuperNIC/Meili-style consolidation) where drops,
-    ECN marks and watchdog kills all fire at volume.
+    """Tenant-*count* scale sweep on ONE simulated NIC (DESIGN.md §8):
+    ``tenants`` flows share a single fully-utilized 400G link against
+    32 PUs — a deliberately overloaded consolidation point
+    (SuperNIC/Meili-style) where drops, ECN marks and watchdog kills
+    all fire at volume.  Despite the name this is NOT the multi-NIC
+    fabric family: no switch is modeled and nothing crosses a
+    crossbar.  For N NICs exchanging traffic through the modeled
+    VOQ/crossbar switch — placement, live migration, global QoS — see
+    the ``fleet_fabric`` / ``fleet_incast`` / ``fleet_migrate``
+    scenarios (repro.fleet.scenarios, DESIGN.md §12).
 
     Four service classes cycle across the fleet: light RPC handlers,
     histogram analytics, heavy ML preprocessing, and watchdog-bounded
@@ -346,3 +352,10 @@ def serve_three_class(*, scheduler: str = "wlbvt", arbiter: str = "dwrr",
         scheduler=scheduler, arbiter=arbiter, seed=seed,
         serve=ServeSpec(max_slots=6, max_len=256, prefill_chunk=32,
                         vocab=vocab))
+
+
+# ---------------------------------------------------------------------------
+# fleet-plane scenarios (multi-NIC fabric): registered on import; the
+# registry loads only this module, so the fleet catalog hooks in here
+# ---------------------------------------------------------------------------
+from repro.fleet import scenarios as _fleet_scenarios  # noqa: E402,F401

@@ -193,6 +193,7 @@ class EngineBase:
         self.slo_audit = None
         self._obs_baseline = None
         self._obs_seq = 0
+        self.obs_nic = ""   # fleet runs tag shared-bus frames "nic<k>"
 
     # -- trace plane ---------------------------------------------------------
     def trace_flush(self, t: float) -> None:
@@ -340,5 +341,6 @@ class EngineBase:
                 signals=sig, counts=counts,
                 interval_counts=interval_counts,
                 weights=np.array(prio, float),
-                admit=self._admit.copy(), alerts=alerts))
+                admit=self._admit.copy(), alerts=alerts,
+                nic=self.obs_nic))
         self._obs_seq += 1

@@ -24,6 +24,9 @@ class EventKind(enum.Enum):
     ADMITTED = "admitted"
     EVICTED = "evicted"
     SLO_ALERT = "slo_alert"
+    MIGRATE_START = "migrate_start"
+    MIGRATE_DONE = "migrate_done"
+    SWITCH_DROP = "switch_drop"
 
 
 # Where each kind is consumed once it leaves the EQ.  Every member MUST
@@ -64,6 +67,18 @@ EVENT_DISPOSITIONS = {
         "burn-rate SLO alert (telemetry/slo_audit.py): consumed by the "
         "metrics bus / dashboard, the trace plane (alert->intervention "
         "causality) and RunReport.extras['slo_audit']",
+    EventKind.MIGRATE_START:
+        "fleet plane (fleet/engine.py): global QoS began live-migrating "
+        "the tenant — source FMQ drained, queue state in flight; paired "
+        "with MIGRATE_DONE in RunReport.extras['fleet']['migrations']",
+    EventKind.MIGRATE_DONE:
+        "fleet plane (fleet/engine.py): drained queue replayed through "
+        "the fabric onto the destination NIC; tenant re-homed in "
+        "extras['fleet']['placement_final']",
+    EventKind.SWITCH_DROP:
+        "fabric VOQ overflow (fleet/switch.py): counted per tenant in "
+        "extras['fleet']['switch'] and the switch conservation law "
+        "(injected == delivered + dropped + inflight)",
 }
 
 

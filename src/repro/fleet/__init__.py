@@ -1,0 +1,13 @@
+"""Fleet plane: multi-NIC co-simulation over a modeled VOQ/crossbar
+switch fabric, with tenant placement, live migration, and a global QoS
+tier above the per-NIC controllers (DESIGN.md §12)."""
+from repro.fleet.engine import (FLEET_EXTRAS_KEYS, FleetEngine,
+                                fleet_metric_rows, run_fleet)
+from repro.fleet.qos import GlobalQoS
+from repro.fleet.spec import FleetSpec, GlobalQoSSpec
+from repro.fleet.switch import CrossbarSwitch
+
+__all__ = [
+    "CrossbarSwitch", "FLEET_EXTRAS_KEYS", "FleetEngine", "FleetSpec",
+    "GlobalQoS", "GlobalQoSSpec", "fleet_metric_rows", "run_fleet",
+]

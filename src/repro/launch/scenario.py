@@ -71,6 +71,7 @@ def run_one(name: str, backend: str, params, *, arch: str = "",
             f"(supported: {', '.join(spec.backends)})")
 
     bus = None
+    om_sink = None
     if (export_dir or dash) and not spec.analytic:
         from repro.telemetry.bus import MetricsBus
         bus = MetricsBus()
@@ -78,12 +79,28 @@ def run_one(name: str, backend: str, params, *, arch: str = "",
         if export_dir:
             os.makedirs(export_dir, exist_ok=True)
             from repro.telemetry.export import attach_exporters
-            attach_exporters(
+            om_sink, _ = attach_exporters(
                 bus, os.path.join(export_dir, f"{name}.{backend}"),
                 names=names)
         if dash:
             from repro.launch.dash import Dashboard
             bus.add_sink(Dashboard(names=names))
+
+    from repro.fleet.spec import FleetSpec
+    if isinstance(spec, FleetSpec) and not spec.analytic:
+        # fleet scenarios: N per-NIC engines over the modeled switch,
+        # publishing per-NIC frames onto the one shared bus; the fabric
+        # gauges ride into the OpenMetrics exposition as extra rows
+        from repro.fleet.engine import fleet_metric_rows, run_fleet
+        try:
+            rep = run_fleet(spec, backend, bus=bus)
+            if om_sink is not None:
+                om_sink.extra_rows = fleet_metric_rows(
+                    rep.extras["fleet"], backend=backend)
+            return rep
+        finally:
+            if bus is not None:
+                bus.close()
 
     if backend == "serve" and arch and not spec.analytic:
         from repro.api import ServeRuntime

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -296,6 +296,20 @@ class Simulator(EngineBase):
         of the serving engine's KV pressure gauge.  The batched fast path
         overrides this with its SoA depth counters (same values)."""
         return np.array([len(f) / f.capacity for f in self.fmqs])
+
+    def drain_tenant_queue(self, tenant: int) -> List[Tuple[float, int]]:
+        """Live-migration drain (DESIGN.md §12.3): pull every queued —
+        not yet scheduled — packet out of one tenant's FMQ, returning
+        ``(arrival_ns, size_bytes)`` rows in FIFO order for the fleet
+        engine to replay on the destination NIC.  Work already
+        executing on a PU finishes in place here; only queue state
+        migrates.  Call between ``run`` slices, never mid-run."""
+        fmq = self.fmqs[tenant]
+        out = [(pd.arrival, pd.size_bytes) for pd in fmq.fifo]
+        fmq.fifo.clear()
+        if out:
+            self.st.queue_len[tenant] -= len(out)
+        return out
 
     def _commit_window(self, occ: np.ndarray) -> None:
         """Flush staged telemetry + push gauge samples for one IO window;

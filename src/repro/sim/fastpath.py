@@ -491,6 +491,23 @@ class BatchedSimulator(Simulator):
         self._jx[i] = 0.0
         self._jain_cache = None
 
+    def drain_tenant_queue(self, tenant: int) -> List[tuple]:
+        """Live-migration drain — the SoA twin of the event engine's
+        version: the queued packet-store indices are resolved back to
+        ``(arrival_ns, size_bytes)`` rows (identical values, identical
+        FIFO order), then the incremental caches are patched the same
+        way a normal queue-empty transition patches them."""
+        q = self._fifo[tenant]
+        out = [(float(self._p_t[j]), int(self._p_size_l[j])) for j in q]
+        q.clear()
+        if out:
+            self._fifo_len[tenant] = 0
+            self.st.queue_len[tenant] -= len(out)
+            if self.st.cur_occup[tenant] == 0 and self._act[tenant]:
+                self._deactivate(tenant)
+            self._limit_dirty = True
+        return out
+
     # ------------------------------------------------------------------
     # WLBVT decisions: same formulas, cached pu_limit
     # ------------------------------------------------------------------

@@ -48,7 +48,8 @@ class BusFrame:
     the live scheduler arrays (post any controller actuation of the
     *previous* interval).  ``alerts`` carries the SLO burn-rate alerts
     raised in this interval (``slo_audit.SLOAlert``), empty when no
-    audit is attached.
+    audit is attached.  ``nic`` distinguishes publishers sharing one
+    bus in a fleet run (``"nic<k>"``; empty on single-engine runs).
     """
     t: float
     seq: int
@@ -60,6 +61,7 @@ class BusFrame:
     weights: np.ndarray
     admit: np.ndarray
     alerts: Tuple = ()
+    nic: str = ""
 
 
 class Subscription:

@@ -42,8 +42,12 @@ from repro.telemetry.metrics import C_IDX
 DIMENSIONLESS_SUFFIXES = ("total", "ratio", "count")
 UNIT_SUFFIXES = TIME_UNITS + DIMENSIONLESS_SUFFIXES
 
-LABELS_TENANT = ("tenant", "backend")
-LABELS_GLOBAL = ("backend",)
+# the ``nic`` label distinguishes publishers sharing one bus in a
+# fleet run; single-engine runs export it empty (per the Prometheus
+# convention an empty label is equivalent to the label being absent)
+LABELS_TENANT = ("tenant", "backend", "nic")
+LABELS_GLOBAL = ("backend", "nic")
+LABELS_FLEET = ("backend", "nic")   # fabric rows: nic = switch port
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +121,17 @@ METRICS = (
     MetricSpec("osmosis_jain_weighted_ratio", "gauge", "ratio",
                "weighted Jain fairness over windowed occupancy",
                labels=LABELS_GLOBAL),
+    # fleet fabric rows (fleet/engine.fleet_metric_rows feeds these via
+    # OpenMetricsWriter.extra_rows; nic = switch output port)
+    MetricSpec("osmosis_switch_voq_depth_count", "gauge", "count",
+               "peak VOQ depth feeding this output port",
+               labels=LABELS_FLEET),
+    MetricSpec("osmosis_link_utilization_ratio", "gauge", "ratio",
+               "output link serialization busy fraction",
+               labels=LABELS_FLEET),
+    MetricSpec("osmosis_migrations_total", "counter", "total",
+               "live migrations landed on this NIC",
+               labels=LABELS_FLEET),
 )
 
 SPECS_BY_NAME = {m.name: m for m in METRICS}
@@ -178,7 +193,7 @@ def frame_values(frame, names: Optional[Dict[int, str]] = None,
     p99_name = time_metric("osmosis_p99_sojourn", frame.time_unit)
     for t in tenants:
         labels = {"tenant": _tenant_label(names, t),
-                  "backend": frame.backend}
+                  "backend": frame.backend, "nic": frame.nic}
         for mname, col in COUNTER_SOURCES.items():
             rows.append((mname, labels, float(frame.counts[t, C_IDX[col]])))
         rows.append(("osmosis_slo_alerts_total", labels,
@@ -192,12 +207,15 @@ def frame_values(frame, names: Optional[Dict[int, str]] = None,
         rows.append(("osmosis_admit_ratio", labels,
                      float(frame.admit[t])))
     rows.append(("osmosis_jain_weighted_ratio",
-                 {"backend": frame.backend}, float(sig.jain_weighted)))
+                 {"backend": frame.backend, "nic": frame.nic},
+                 float(sig.jain_weighted)))
     return rows
 
 
 def _fmt_labels(labels: Dict[str, str]) -> str:
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    # empty value == label absent (Prometheus data-model convention);
+    # single-engine runs publish nic="" and render without the label
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()) if v)
     return "{" + inner + "}"
 
 
@@ -211,21 +229,23 @@ class JsonlExporter:
         self.path = path
         self.names = names
         self._f = open(path, "w")
-        self._alert_totals: Dict[int, int] = {}
+        # alert totals accumulate per publisher: on a shared fleet bus
+        # one NIC's alerts must not leak into another NIC's rows
+        self._alert_totals: Dict[str, Dict[int, int]] = {}
         self.lines = 0
 
     def on_frame(self, frame) -> None:
+        totals = self._alert_totals.setdefault(frame.nic, {})
         for a in frame.alerts:
-            self._alert_totals[a.tenant] = \
-                self._alert_totals.get(a.tenant, 0) + 1
+            totals[a.tenant] = totals.get(a.tenant, 0) + 1
         metrics: Dict[str, Dict[str, float]] = {}
         for mname, labels, value in frame_values(
-                frame, self.names, self._alert_totals):
+                frame, self.names, totals):
             metrics.setdefault(mname, {})[
                 labels.get("tenant", "_global")] = value
         rec = {
             "t": frame.t, "seq": frame.seq, "backend": frame.backend,
-            "time_unit": frame.time_unit,
+            "nic": frame.nic, "time_unit": frame.time_unit,
             "metrics": metrics,
             "alerts": [{"tenant": _tenant_label(self.names, a.tenant),
                         "window": a.window,
@@ -241,32 +261,43 @@ class JsonlExporter:
 
 
 class OpenMetricsWriter:
-    """Scrape-style sink: renders the latest frame as one
-    Prometheus/OpenMetrics text exposition at close (or on demand via
-    ``render``)."""
+    """Scrape-style sink: renders the latest frame *per publisher* as
+    one Prometheus/OpenMetrics text exposition at close (or on demand
+    via ``render``).  On a single-engine bus that is exactly the old
+    one-frame behavior; on a shared fleet bus each ``(backend, nic)``
+    source contributes its own latest frame, and the fleet engine can
+    append fabric-level rows through ``extra_rows``."""
 
     def __init__(self, path: str = "",
                  *, names: Optional[Dict[int, str]] = None):
         self.path = path
         self.names = names
-        self._last = None
-        self._alert_totals: Dict[int, int] = {}
+        self._last: Dict[Tuple[str, str], object] = {}   # (backend, nic)
+        self._alert_totals: Dict[str, Dict[int, int]] = {}
         self.frames = 0
+        # explicit (name, labels, value) rows merged into the render —
+        # fleet fabric gauges that no BusFrame carries
+        self.extra_rows: List[tuple] = []
 
     def on_frame(self, frame) -> None:
+        totals = self._alert_totals.setdefault(frame.nic, {})
         for a in frame.alerts:
-            self._alert_totals[a.tenant] = \
-                self._alert_totals.get(a.tenant, 0) + 1
-        self._last = frame
+            totals[a.tenant] = totals.get(a.tenant, 0) + 1
+        self._last[(frame.backend, frame.nic)] = frame
         self.frames += 1
 
     def render(self) -> str:
-        if self._last is None:
+        if not self._last and not self.extra_rows:
             return "# EOF\n"
         by_metric: Dict[str, list] = {}
-        for mname, labels, value in frame_values(
-                self._last, self.names, self._alert_totals):
-            by_metric.setdefault(mname, []).append((labels, value))
+        for key in sorted(self._last):
+            frame = self._last[key]
+            for mname, labels, value in frame_values(
+                    frame, self.names,
+                    self._alert_totals.get(frame.nic, {})):
+                by_metric.setdefault(mname, []).append((labels, value))
+        for mname, labels, value in self.extra_rows:
+            by_metric.setdefault(mname, []).append((dict(labels), value))
         lines: List[str] = []
         for spec in METRICS:               # declared order = stable output
             samples = by_metric.get(spec.name)

@@ -60,8 +60,10 @@ ST_GRANT = 2    # instant at the WLBVT/RR grant; carries the PU slot
 ST_PU = 3       # span [grant, t_comp]: PU execution (incl. DMA setup)
 ST_DMA = 4      # span [t_comp, io_done]: AXI/egress DMA drain
 ST_EQ = 5       # instant at EQ completion/kill
+ST_SWITCH = 6   # span [fabric inject, delivery]: VOQ wait + crossbar
+#                 serialization + propagation (fleet plane)
 STAGES = ("ARRIVE", "FMQ_ENQ", "SCHED_GRANT", "PU_EXEC", "DMA",
-          "EQ_COMPLETE")
+          "EQ_COMPLETE", "SWITCH")
 
 # span dispositions (``disp`` column)
 D_OPEN = 0      # flushed while still open (end of run)
@@ -85,8 +87,10 @@ K_EGRESS_DWRR = 3
 K_ADMISSION = 4
 K_SLO_ALERT = 5       # burn-rate SLO alert (telemetry/slo_audit.py)
 K_QOS_INTERVENE = 6   # controller actuation: AIMD weight / admission flip
+K_FLEET_MIGRATE = 7   # global QoS live migration (fleet/engine.py)
 DECISION_KINDS = ("PU_WLBVT", "PU_RR", "AXI_DWRR", "EGRESS_DWRR",
-                  "ADMISSION", "SLO_ALERT", "QOS_INTERVENE")
+                  "ADMISSION", "SLO_ALERT", "QOS_INTERVENE",
+                  "FLEET_MIGRATE")
 
 # reason codes (decision ring ``reason`` column)
 R_PRIORITY = 0        # winner was the highest-priority/-weight eligible
@@ -97,8 +101,10 @@ R_BURN_FAST = 4       # fast-window burn crossing (SLO_ALERT rows)
 R_BURN_SLOW = 5       # slow-window burn crossing (SLO_ALERT rows)
 R_AIMD_WEIGHT = 6     # QOS_INTERVENE: boost changed for the winner tenant
 R_ADMISSION_GATE = 7  # QOS_INTERVENE: admission gate flipped
+R_MIGRATION = 8       # FLEET_MIGRATE: SLO violation on an overloaded NIC
 REASONS = ("PRIORITY", "DEBT", "FORCED_SINGLE", "ADMISSION_REJECT",
-           "BURN_FAST", "BURN_SLOW", "AIMD_WEIGHT", "ADMISSION_GATE")
+           "BURN_FAST", "BURN_SLOW", "AIMD_WEIGHT", "ADMISSION_GATE",
+           "MIGRATION")
 
 SPAN_RING_DEPTH = 65536
 DECISION_RING_DEPTH = 8192

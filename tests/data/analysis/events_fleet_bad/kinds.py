@@ -1,0 +1,25 @@
+"""Known-bad fleet EQ-event fixture.
+
+tests/test_analysis.py asserts the exact line of every finding — keep
+line numbers stable when editing.
+
+  MIGRATE_START — fine (registered, emitted, consumed)
+  MIGRATE_DONE  — line 23: empty consumer string in the registry
+  SWITCH_DROP   — line 17: no registry entry (emitted + consumed)
+  MIGRATE_ABORT — line 18: no registry entry; never emitted anywhere
+  DRAINED       — line 24: stale registry row (not a declared member)
+"""
+
+
+class EventKind:
+    MIGRATE_START = 1
+    MIGRATE_DONE = 2
+    SWITCH_DROP = 3
+    MIGRATE_ABORT = 4
+
+
+EVENT_DISPOSITIONS = {
+    EventKind.MIGRATE_START: "fleet/engine.py: migration record",
+    EventKind.MIGRATE_DONE: "",
+    EventKind.DRAINED: "gone",
+}

@@ -1,0 +1,15 @@
+"""Emit/consume sites: SWITCH_DROP emitted without a registry row,
+MIGRATE_ABORT never emitted at all."""
+from .kinds import EventKind
+
+
+def emit(push):
+    push(EventKind.MIGRATE_START)
+    push(EventKind.MIGRATE_DONE)
+    push(EventKind.SWITCH_DROP)
+
+
+def consume(ev):
+    if ev.kind == EventKind.SWITCH_DROP:
+        return "dropped"
+    return ev.kind == EventKind.MIGRATE_START

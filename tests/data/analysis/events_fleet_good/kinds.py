@@ -1,0 +1,16 @@
+"""Known-good fleet EQ-event fixture: the migration + fabric kinds
+(mirrors core/events.py after the fleet plane), every kind registered
+with a named consumer and emitted."""
+
+
+class EventKind:
+    MIGRATE_START = 1
+    MIGRATE_DONE = 2
+    SWITCH_DROP = 3
+
+
+EVENT_DISPOSITIONS = {
+    EventKind.MIGRATE_START: "fleet/engine.py: migration record + trace",
+    EventKind.MIGRATE_DONE: "fleet/engine.py: migration record + trace",
+    EventKind.SWITCH_DROP: "fleet/switch.py: drop counters + report",
+}

@@ -1,0 +1,14 @@
+"""Emit + consume sites for every kind declared in kinds.py."""
+from .kinds import EventKind
+
+
+def emit(push):
+    push(EventKind.MIGRATE_START)
+    push(EventKind.MIGRATE_DONE)
+    push(EventKind.SWITCH_DROP)
+
+
+def consume(ev, table):
+    if ev.kind == EventKind.MIGRATE_START:
+        return table[EventKind.MIGRATE_DONE]
+    return ev.kind == EventKind.SWITCH_DROP

@@ -109,6 +109,31 @@ def test_events_bad_exact_findings():
         ["EventKind.GHOST is declared but never emitted"]
 
 
+def test_events_fleet_good_is_clean():
+    """The fleet-plane kinds (MIGRATE_START/MIGRATE_DONE/SWITCH_DROP)
+    with named consumers pass the exhaustiveness rule."""
+    fs = run_rule(EventExhaustivenessRule(scope=("*",)), ["."],
+                  root=os.path.join(FIXTURES, "events_fleet_good"))
+    assert fs == []
+
+
+def test_events_fleet_bad_exact_findings():
+    fs = run_rule(EventExhaustivenessRule(scope=("*",)), ["."],
+                  root=os.path.join(FIXTURES, "events_fleet_bad"))
+    assert all(f.rule == "eq-event-exhaustiveness" for f in fs)
+    assert locs(fs) == {
+        (23, "EVENT_DISPOSITIONS[EventKind.MIGRATE_DONE] must be a "
+             "non-empty string naming the consumer"),
+        (24, "EVENT_DISPOSITIONS lists EventKind.DRAINED, which is not a "
+             "declared member"),
+        (17, "EventKind.SWITCH_DROP has no EVENT_DISPOSITIONS entry: "
+             "declare where this event is consumed"),
+        (18, "EventKind.MIGRATE_ABORT has no EVENT_DISPOSITIONS entry: "
+             "declare where this event is consumed"),
+        (18, "EventKind.MIGRATE_ABORT is declared but never emitted"),
+    }
+
+
 # ---------------------------------------------------------------------------
 # pass 4: frozen-spec + fixed-shape
 # ---------------------------------------------------------------------------

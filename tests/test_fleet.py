@@ -1,0 +1,268 @@
+"""Fleet plane (DESIGN.md §12): multi-NIC co-simulation over the
+modeled VOQ/crossbar fabric.
+
+Pins the PR's acceptance properties:
+
+* an ``N=1`` ideal-fabric fleet run is byte-identical to the plain
+  single-NIC datapath (the fleet wrapper adds nothing to the physics);
+* ``fleet_incast`` shows per-output VOQs preventing HoL blocking — the
+  quiet pair's fabric latency stays at serialization + propagation
+  while output 0 saturates;
+* ``fleet_migrate`` shows the global QoS tier draining an SLO victim
+  off a congested NIC and replaying it across the fabric, with the
+  victim's sojourn p99 improving and fleet-wide Jain fairness holding;
+* fabric conservation: every injected packet is exactly once
+  delivered, dropped (with a ``SWITCH_DROP`` EQ event), or in-flight —
+  property-tested over randomized fabrics;
+* the fleet results are byte-identical across the event and batched
+  sim datapaths.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+
+
+def _get(name, **kw):
+    from repro.api import get_scenario
+    return get_scenario(name, **kw)
+
+
+def _run(spec, **kw):
+    from repro.fleet import run_fleet
+    return run_fleet(spec, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry + report schema
+# ---------------------------------------------------------------------------
+def test_fleet_scenarios_registered():
+    from repro.api import list_scenarios
+    names = {s["name"] for s in list_scenarios()}
+    assert {"fleet_fabric", "fleet_incast", "fleet_migrate"} <= names
+
+
+def test_fleet_report_validates_and_carries_fleet_block():
+    from repro.fleet.engine import FLEET_EXTRAS_KEYS
+    rep = _run(_get("fleet_fabric", duration_us=40.0))
+    rep.validate()
+    fl = rep.extras["fleet"]
+    assert all(k in fl for k in FLEET_EXTRAS_KEYS)
+    assert len(fl["per_nic"]) == fl["num_nics"] == 4
+    # per-tenant home-NIC labels ride in TenantReport.extra
+    assert all(r.extra["nic"].startswith("nic") for r in rep.tenants.values())
+
+
+def test_fleet_block_schema_is_enforced():
+    rep = _run(_get("fleet_fabric", duration_us=40.0))
+    del rep.extras["fleet"]["jain_fleet"]
+    with pytest.raises(ValueError, match="fleet extras missing"):
+        rep.validate()
+
+
+def test_fleet_rejects_serve_backend():
+    with pytest.raises(ValueError, match="sim backend"):
+        _run(_get("fleet_fabric", duration_us=40.0), backend="serve")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: N=1 ideal fabric == the plain single-NIC datapath
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("datapath", ["event", "batched"])
+def test_n1_ideal_fabric_bit_identical_to_single_nic(datapath):
+    from repro.api import run_scenario
+    from repro.api.spec import ScenarioSpec
+    from repro.fleet.spec import FleetSpec
+    base = _get("qos_closed_loop", duration_us=60.0)
+    fs = FleetSpec(**{f.name: getattr(base, f.name)
+                      for f in dataclasses.fields(ScenarioSpec)},
+                   num_nics=1, link_gbps=0.0, prop_delay_ns=0.0)
+    fleet = _run(fs.replace(datapath=datapath))
+    ref = run_scenario(fs.plain().replace(datapath=datapath), "sim")
+    assert (json.dumps(fleet.extras["fleet"]["per_nic"][0], sort_keys=True)
+            == json.dumps(ref.to_dict(), sort_keys=True))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: VOQ prevents HoL blocking under 16-NIC incast
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def incast_report():
+    return _run(_get("fleet_incast"))
+
+
+def test_incast_saturates_hot_output_only(incast_report):
+    sw = incast_report.extras["fleet"]["switch"]
+    util = sw["link_utilization"]
+    assert util[0] > 0.9                       # incast output saturated
+    assert util[-1] < 0.1                      # quiet output nearly idle
+
+
+def test_incast_voq_keeps_quiet_pair_flat(incast_report):
+    spec = incast_report.spec
+    n = spec["num_nics"]
+    sw = incast_report.extras["fleet"]["switch"]
+    lat = np.asarray(sw["pair_latency_mean"])
+    quiet_size = spec["tenants"][-1]["arrival"]["size"]
+    ideal = quiet_size * 8.0 / spec["link_gbps"] + spec["prop_delay_ns"]
+    quiet = lat[n - 1, n - 1]
+    congested = lat[:n - 1, 0]
+    assert 0.0 < quiet < 3.0 * ideal           # flat: no HoL from output 0
+    assert congested.mean() > 10.0 * quiet     # hot pairs queue heavily
+
+
+# ---------------------------------------------------------------------------
+# acceptance: global QoS migrates the victim; p99 improves, Jain holds
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def migrate_reports():
+    return {mig: _run(_get("fleet_migrate", migrate=mig))
+            for mig in (True, False)}
+
+
+def test_migration_fires_with_eq_events(migrate_reports):
+    fl = migrate_reports[True].extras["fleet"]
+    assert fl["migrations_total"] >= 1
+    m = fl["migrations"][0]
+    assert m["tenant"] == 2 and m["src"] == 0 and m["dst"] == 1
+    assert fl["placement_final"][2] == 1
+    kinds = [e["kind"] for e in migrate_reports[True].events]
+    assert "migrate_start" in kinds and "migrate_done" in kinds
+    # causality: the victim's SLO alert precedes the migration decision
+    t_alert = min(e["time"] for e in migrate_reports[True].events
+                  if e["kind"] == "slo_alert" and e["tenant"] == 2)
+    t_mig = min(e["time"] for e in migrate_reports[True].events
+                if e["kind"] == "migrate_start")
+    assert t_alert < t_mig
+    # the control arm never migrates
+    assert migrate_reports[False].extras["fleet"]["migrations_total"] == 0
+
+
+def test_migration_improves_victim_p99_and_jain_holds(migrate_reports):
+    with_mig = migrate_reports[True].extras["fleet"]
+    without = migrate_reports[False].extras["fleet"]
+    # victim (tenant 2) arrival->completion p99 on its final NIC
+    assert with_mig["sojourn_p99"][2] < 0.5 * without["sojourn_p99"][2]
+    # ...and the victim still meets its SLO target after re-homing
+    target = migrate_reports[True].spec["tenants"][2]["p99_target"]
+    assert with_mig["sojourn_p99"][2] < target
+    # fleet-wide weighted Jain fairness does not regress
+    assert with_mig["jain_fleet"] >= without["jain_fleet"] - 0.05
+    # same offered load lands in both arms (arrivals differ by the
+    # replayed in-flight packets, which re-arrive on the new home NIC)
+    t2m = migrate_reports[True].tenants[2]
+    t2s = migrate_reports[False].tenants[2]
+    assert t2m.completed + t2m.drops == t2s.completed + t2s.drops
+
+
+# ---------------------------------------------------------------------------
+# acceptance: byte-identical across the event and batched datapaths
+# ---------------------------------------------------------------------------
+def _drift_free(rep):
+    """Everything except the time-averaged Jain accumulators (known
+    last-ulp float drift between the datapaths, matching the repo-wide
+    idiom of pinning identity on the drift-free blocks) and the spec
+    echoes (which differ in the ``datapath`` field by construction)."""
+    d = rep.to_dict()
+    d.pop("spec")
+    d.pop("jain_pu"), d.pop("jain_io")
+    for pn in d["extras"]["fleet"]["per_nic"]:
+        pn.pop("spec")
+        pn.pop("jain_pu"), pn.pop("jain_io")
+    return json.dumps(d, sort_keys=True)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("fleet_fabric", {"duration_us": 40.0}),
+    ("fleet_incast", {"duration_us": 40.0}),
+    ("fleet_migrate", {}),
+])
+def test_fleet_results_identical_across_datapaths(name, kw):
+    a = _run(_get(name, datapath="event", **kw))
+    b = _run(_get(name, datapath="batched", **kw))
+    assert _drift_free(a) == _drift_free(b)
+
+
+# ---------------------------------------------------------------------------
+# conservation: injected == delivered + dropped(+EQ event) + in-flight
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_switch_packet_conservation(data):
+    from repro.core.events import EventKind
+    from repro.fleet.switch import CrossbarSwitch
+    n = data.draw(st.integers(min_value=2, max_value=4))
+    sw = CrossbarSwitch(
+        n, num_tenants=n,
+        link_gbps=data.draw(st.floats(min_value=10.0, max_value=400.0)),
+        prop_delay_ns=data.draw(st.floats(min_value=0.0, max_value=100.0)),
+        voq_depth=data.draw(st.integers(min_value=1, max_value=4)),
+        arbiter=("rr" if data.draw(st.booleans()) else "mdrr"),
+        quantum_bytes=4096, track_ids=True)
+    t = 0.0
+    npkts = data.draw(st.integers(min_value=1, max_value=60))
+    for k in range(npkts):
+        t += data.draw(st.floats(min_value=0.0, max_value=40.0))
+        sw.inject(t,
+                  data.draw(st.integers(min_value=0, max_value=n - 1)),
+                  data.draw(st.integers(min_value=0, max_value=n - 1)),
+                  data.draw(st.integers(min_value=0, max_value=n - 1)),
+                  data.draw(st.integers(min_value=64, max_value=2048)))
+        if k % 5 == 0:
+            sw.advance(t)
+            # counts conservation holds mid-run, with packets in flight
+            assert (int(sw.injected.sum())
+                    == int(sw.delivered.sum()) + int(sw.dropped.sum())
+                    + sw.inflight)
+    for _ in range(64):                        # drain the fabric
+        if sw.idle:
+            break
+        t += 1e6
+        sw.advance(t)
+    assert sw.idle and sw.inflight == 0
+    # full id-set conservation: delivered/dropped disjoint, union == injected
+    assert sw.conservation_ok()
+    drops = [e for e in sw.events if e.kind == EventKind.SWITCH_DROP]
+    assert len(drops) == int(sw.dropped.sum())
+
+
+def test_fleet_run_conserves_packets_under_tiny_voqs():
+    # short run: every drop must fit in the report's event cap so the
+    # EQ-event count can be compared against the drop counters exactly
+    rep = _run(_get("fleet_incast", voq_depth=4, duration_us=12.0),
+               track_switch_ids=True)
+    sw = rep.extras["fleet"]["switch"]
+    assert sw["drops_total"] > 0               # tiny VOQs must drop
+    assert (sum(sw["injected"]) + sum(sw["replayed"])
+            == sum(sw["delivered"]) + sw["drops_total"] + sw["inflight"])
+    eq_drops = [e for e in rep.events if e["kind"] == "switch_drop"]
+    assert len(eq_drops) == sw["drops_total"]
+    # the switch drops are attributed on the tenant reports too
+    per_tenant = [r.extra["switch_drops"] for r in rep.tenants.values()]
+    assert sum(per_tenant) == sw["drops_total"]
+
+
+# ---------------------------------------------------------------------------
+# observability: fleet export schema golden (CI gate companion)
+
+def test_fleet_openmetrics_schema_matches_golden(tmp_path):
+    """A fleet export run (per-NIC frames on a shared bus + fabric
+    extra_rows) must keep the declared schema: every family labeled
+    ``{backend,nic}`` or ``{backend,nic,tenant}`` plus the three
+    fleet-only families.  Regenerate via ``schema_lines`` after an
+    intentional metrics change."""
+    import os
+    from repro.launch.scenario import run_one
+    from repro.telemetry.export import schema_lines
+    run_one("fleet_fabric", "sim", {}, fast=True, export_dir=str(tmp_path))
+    text = (tmp_path / "fleet_fabric.sim.om.txt").read_text()
+    golden = os.path.join(os.path.dirname(__file__), "data",
+                          "openmetrics_schema.fleet.golden")
+    assert schema_lines(text) == open(golden).read().splitlines()
+    # every per-NIC sample carries a concrete nic label; the empty-nic
+    # (single-engine) form must not appear in a fleet exposition
+    assert 'nic=""' not in text
+    assert 'nic="nic0"' in text
