@@ -23,12 +23,14 @@ def main(argv=None) -> int:
 
     from benchmarks import (export_overhead, fleet_throughput, paper_figs,
                             sched_cost, serving_fairness, sim_throughput,
-                            telemetry_overhead, trace_overhead)
+                            sweep_throughput, telemetry_overhead,
+                            trace_overhead)
     suite = dict(paper_figs.ALL)
     suite["sched_cost"] = sched_cost.run
     suite["serving_fairness"] = serving_fairness.run
     suite["telemetry_overhead"] = telemetry_overhead.run
     suite["sim_throughput"] = sim_throughput.run
+    suite["sweep_throughput"] = sweep_throughput.run
     suite["fleet_throughput"] = fleet_throughput.run
     suite["trace_overhead"] = trace_overhead.run
     suite["export_overhead"] = export_overhead.run

@@ -38,7 +38,7 @@ from repro.analysis.framework import (
 # pull callees in from anywhere in the index)
 DEFAULT_SCOPE = (
     "src/repro/core/*", "src/repro/telemetry/*", "src/repro/serving/*",
-    "src/repro/sim/*",
+    "src/repro/sim/*", "src/repro/kernels/*",
 )
 
 # np attributes that are host constants / dtypes — fine under trace

@@ -18,12 +18,14 @@ from repro.api.runtime import (Runtime, ServeRuntime, SimRuntime,
                                run_scenario)
 from repro.api.spec import (ArrivalSpec, ControllerSpec, ScenarioSpec,
                             ServeSpec, TenantSpec, WorkloadSpec)
+from repro.api.sweep import SweepAxis, SweepSpec, apply_knob
 
 __all__ = [
     "Runtime", "SimRuntime", "ServeRuntime", "make_runtime", "run_scenario",
     "build_traces", "build_requests",
     "ScenarioSpec", "TenantSpec", "ArrivalSpec", "WorkloadSpec",
     "ControllerSpec", "ServeSpec",
+    "SweepSpec", "SweepAxis", "apply_knob",
     "RunReport", "TenantReport", "SCHEMA_VERSION", "TENANT_FIELDS",
     "register_scenario", "get_scenario", "list_scenarios",
 ]

@@ -149,3 +149,34 @@ def dwrr_select(weights, deficit, ptr, head, pending, quantum, xp):
     new_deficit = xp.where(any_p, xp.where(f1, d1, d2), deficit)
     new_ptr = xp.where(any_p, xp.where(f1, p1, p2), ptr)
     return idx, new_deficit, new_ptr
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched WLBVT (device datapath — DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def pu_limit_lanes(prio, queue_len, num_pus, xp):
+    """`pu_limit` reduced over the trailing tenant axis: every leading
+    axis is an independent replica lane, so one call computes the caps
+    for a whole ``[R, T]`` sweep batch.  Formula is token-for-token the
+    scalar kernel's — the device datapath's parity guarantee rests on
+    the two never diverging."""
+    nonempty = queue_len > 0
+    psum = xp.sum(xp.where(nonempty, prio, 0.0), axis=-1, keepdims=True)
+    lim = xp.ceil(num_pus * prio / xp.maximum(psum, 1e-9) - CEIL_EPS)
+    return xp.where(psum > 0, lim, float(num_pus))
+
+
+def select_lanes(prio, queue_len, cur_occup, total_occup, bvt, num_pus, xp,
+                 metric=None):
+    """`select` over ``[..., T]`` lanes: one WLBVT decision per leading
+    index, -1 where nothing is eligible.  ``metric`` lets round drivers
+    hoist the throughput term (constant within a dispatch round — picks
+    change only eligibility, never total_occup/bvt/prio)."""
+    limit = pu_limit_lanes(prio, queue_len, num_pus, xp)
+    eligible = (queue_len > 0) & (cur_occup < limit)
+    if metric is None:
+        metric = tput(total_occup, bvt, xp) / prio
+    masked = xp.where(eligible, metric, BIG)
+    idx = xp.argmin(masked, axis=-1)
+    any_e = xp.any(eligible, axis=-1)
+    return xp.where(any_e, idx, -1)

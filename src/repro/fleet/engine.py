@@ -274,7 +274,14 @@ class FleetEngine:
         self.fleet_events.append(Event(
             tenant, EventKind.MIGRATE_START, t,
             detail=f"{detail} drained={len(drained)}"))
-        t_rep = t + float(self.spec.migration_delay_ns)
+        # handoff = fixed drain/replay cost + serialized state transfer:
+        # the drained queue's bytes cross the migration link (1 Gbps =
+        # 1 bit/ns).  migration_gbps == 0 keeps the legacy fixed delay.
+        delay = float(self.spec.migration_delay_ns)
+        if self.spec.migration_gbps > 0:
+            drained_bytes = sum(int(size) for (_a, size) in drained)
+            delay += drained_bytes * 8.0 / float(self.spec.migration_gbps)
+        t_rep = t + delay
         for (_arrival, size) in drained:
             self.switch.inject(t_rep, src, dst, tenant, int(size),
                                replay=True)

@@ -72,7 +72,10 @@ class FleetSpec(ScenarioSpec):
     quantum_bytes: int = 4096            # mdrr per-round credit
     epoch_ns: float = 8000.0             # co-sim step (multiple of the
     #                                      engines' 2000ns IO window)
-    migration_delay_ns: float = 2000.0   # drain -> replay handoff cost
+    migration_delay_ns: float = 2000.0   # fixed drain -> replay handoff
+    migration_gbps: float = 0.0          # state-transfer link: > 0 adds
+    #                                      drained_bytes * 8 / gbps ns to
+    #                                      the handoff (0 = fixed only)
     global_qos: Optional[GlobalQoSSpec] = None
     trace_fleet: bool = False            # switch-traversal + migration
     #                                      spans into a fleet TraceRecorder

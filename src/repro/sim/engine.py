@@ -84,6 +84,34 @@ class TenantStats:
         self.kernel_time_sum += value
         self._kt_pcache = None
 
+    def record_kernel_times(self, values: np.ndarray) -> None:
+        """Bulk replay of ``record_kernel_time`` over ``values`` in
+        order, bit-identical to the sequential calls: the fill phase is
+        a copy, the sum a ``cumsum`` tail (left-to-right accumulation,
+        same rounding as ``+=``), and only samples past the reservoir
+        cap walk the replacement rng one draw at a time."""
+        values = np.asarray(values, dtype=float)
+        if values.size == 0:
+            return
+        if self.kernel_time_count or self._kt_buf is not None:
+            for v in values:              # mid-stream: no shortcut
+                self.record_kernel_time(float(v))
+            return
+        buf = np.empty(KT_RESERVOIR_CAP)
+        m = min(values.size, KT_RESERVOIR_CAP)
+        buf[:m] = values[:m]
+        self._kt_buf = buf
+        if values.size > KT_RESERVOIR_CAP:
+            rng = np.random.default_rng(_KT_RNG_SEED)
+            for k in range(KT_RESERVOIR_CAP, values.size):
+                j = int(rng.integers(0, k + 1))
+                if j < KT_RESERVOIR_CAP:
+                    buf[j] = values[k]
+            self._kt_rng = rng
+        self.kernel_time_count = int(values.size)
+        self.kernel_time_sum = float(values.cumsum()[-1])
+        self._kt_pcache = None
+
     @property
     def kernel_times(self) -> np.ndarray:
         """The retained kernel-time sample (complete below the cap).

@@ -1,0 +1,27 @@
+"""Process-level XLA environment tuning (DESIGN.md §13.5).
+
+XLA options only take effect if ``XLA_FLAGS`` is set before the first
+``import jax`` initializes the backend, so this module must stay free of
+jax (and repro-module) imports and be called at entry-point top, before
+anything that transitively pulls jax in.
+"""
+from __future__ import annotations
+
+import os
+
+
+def tune_cpu_for_scan_sweeps() -> None:
+    """Pin the XLA:CPU options that favour long scan-dominated sweeps.
+
+    The CPU thunk runtime dispatches every fused kernel through a
+    thread-pool; a device-path sweep step is ~50 tiny ops over [R, T]
+    lanes, so per-thunk dispatch dominates and the pool buys nothing
+    (measured ~3x wall-clock on the 256-replica benchmark sweep).  The
+    legacy emitter runs the step body inline.  No-op when the user
+    already pins ``xla_cpu_use_thunk_runtime`` themselves, and harmless
+    on non-CPU backends (the flag only affects the CPU client).
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_cpu_use_thunk_runtime=false").strip()

@@ -1,0 +1,35 @@
+"""Known-bad jit-purity fixture: device-datapath violations.
+
+tests/test_analysis.py asserts the exact line of every finding — keep
+line numbers stable when editing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@jax.jit
+def branch_on_pick(tfin, pick):
+    if pick >= 0:                           # line 14: traced `if`
+        return tfin.at[pick].set(jnp.inf)
+    return tfin
+
+
+@jax.jit
+def host_counter_in_step(state, x):
+    def body(s, v):
+        c = np.cumsum(v)                    # line 22: np in scan body
+        return s + c[0], c[0]
+    return lax.scan(body, state, x)
+
+
+@jax.jit
+def ragged_completions(comp_pkt):
+    return jnp.flatnonzero(comp_pkt >= 0)   # line 29: dynamic shape
+
+
+@jax.jit
+def inplace_ring(buf, tail, v):
+    buf[tail] = v                           # line 34: subscript store
+    return buf

@@ -1,0 +1,44 @@
+"""Known-good jit-purity fixture: device-datapath idioms.
+
+The ``sim/devicepath.py`` / ``kernels/wlbvt_select.py`` style — factory
+closures feeding ``lax.scan``, masked trash-slot scatters, static
+``impl: str`` backend branches — must produce ZERO findings.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PAD = 8          # trash-slot index (ALL_CAPS module constant)
+
+
+@functools.lru_cache(maxsize=4)
+def build_launch(n: int, impl: str):
+    """Factory-closed static geometry; the jit root is the closure."""
+
+    def step(state, d):
+        tfin, free = state
+        tmin = jnp.min(tfin)
+        pc = jnp.argmin(jnp.where(tfin == tmin, d, jnp.inf))
+        live = tmin < jnp.inf
+        # masked scatter aims at the pad slot — no traced branch
+        pc_w = jnp.where(live, pc, PAD)
+        tfin = tfin.at[pc_w].set(jnp.inf)
+        free = free + jnp.where(live, 1, 0)
+        return (tfin, free), tmin
+
+    def launch(state, d):
+        if impl == "ref":              # `impl: str` is trace-static
+            return lax.scan(lambda s, _: step(s, d), state, None, length=n)
+        return lax.scan(lambda s, _: step(s, d), state, None, length=n)
+
+    return jax.jit(launch)
+
+
+def select_pick(prio, queue_len, metric):
+    """Masked argmin with eligibility predicate (select-lanes idiom)."""
+    elig = queue_len > 0
+    masked = jnp.where(elig, metric / prio, jnp.inf)
+    idx = jnp.argmin(masked, axis=-1)
+    return jnp.where(jnp.any(elig, axis=-1), idx, -1)

@@ -58,6 +58,32 @@ def test_purity_bad_exact_findings():
     assert len(fs) == 7
 
 
+def test_devicepath_good_is_clean():
+    assert run_rule(JitPurityRule(scope=("*",)),
+                    ["devicepath_good.py"]) == []
+
+
+def test_devicepath_bad_exact_findings():
+    fs = run_rule(JitPurityRule(scope=("*",)), ["devicepath_bad.py"])
+    assert all(f.rule == "jit-purity" and f.severity == "error" for f in fs)
+    assert {(f.line, f.symbol) for f in fs} == {
+        (14, "branch_on_pick"),        # traced `if` on a pick value
+        (22, "host_counter_in_step.body"),  # np call inside a scan body
+        (29, "ragged_completions"),    # data-dependent shape
+        (34, "inplace_ring"),          # subscript store
+    }
+
+
+def test_devicepath_modules_in_default_scope():
+    """The device datapath and the WLBVT kernel must sit inside the
+    repo gate's reachability scope (ISSUE 10 satellite)."""
+    from repro.analysis.purity import DEFAULT_SCOPE
+    import fnmatch
+    for path in ("src/repro/sim/devicepath.py",
+                 "src/repro/kernels/wlbvt_select.py"):
+        assert any(fnmatch.fnmatch(path, pat) for pat in DEFAULT_SCOPE), path
+
+
 # ---------------------------------------------------------------------------
 # pass 2: time-unit flow
 # ---------------------------------------------------------------------------

@@ -158,6 +158,23 @@ def test_migration_improves_victim_p99_and_jain_holds(migrate_reports):
     assert t2m.completed + t2m.drops == t2s.completed + t2s.drops
 
 
+def test_migration_delay_scales_with_drained_bytes(migrate_reports):
+    # default migration_gbps=0 keeps the legacy fixed handoff cost
+    fixed = migrate_reports[True].spec["migration_delay_ns"]
+    m0 = migrate_reports[True].extras["fleet"]["migrations"][0]
+    assert m0["done_t"] - m0["t"] == fixed
+    # a finite state-transfer link adds the serialized drained bytes
+    spec = dataclasses.replace(
+        _get("fleet_migrate", migrate=True, datapath="batched"),
+        migration_gbps=1.0)
+    rep = _run(spec)
+    m1 = rep.extras["fleet"]["migrations"][0]
+    assert m1["packets"] > 0
+    size = rep.spec["tenants"][m1["tenant"]]["arrival"]["size"]
+    assert (m1["done_t"] - m1["t"]
+            == fixed + m1["packets"] * size * 8.0 / spec.migration_gbps)
+
+
 # ---------------------------------------------------------------------------
 # acceptance: byte-identical across the event and batched datapaths
 # ---------------------------------------------------------------------------
